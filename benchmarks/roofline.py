@@ -1,0 +1,74 @@
+"""Roofline report generator — renders EXPERIMENTS.md §Roofline from the
+dry-run JSON produced by ``repro.launch.dryrun --all --out ...``.
+
+  PYTHONPATH=src python -m benchmarks.roofline \
+      --json benchmarks/dryrun_single_pod.json --md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def render(data: dict, md: bool = False) -> str:
+    lines = []
+    if md:
+        lines.append("| arch | shape | compute | memory | collective | "
+                     "dominant | useful-FLOPs | peak GiB/dev | fits 16G |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in data["results"]:
+        if r.get("skipped"):
+            if md:
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                             f"skipped | — | — | — |")
+            else:
+                lines.append(f"{r['arch']:24s} {r['shape']:12s} SKIPPED: "
+                             f"{r['skipped']}")
+            continue
+        t = r["roofline"]
+        pd = r["per_device"]
+        # donation-adjusted peak: the CPU backend ignores donation, so the
+        # donated state's output copy (params+opt / KV cache) is an artifact
+        adj = pd.get("adjusted_peak_bytes",
+                     pd["peak_bytes"] - min(pd.get("output_bytes", 0),
+                                            pd.get("argument_bytes", 0)))
+        peak = adj / 2**30
+        fits = "yes" if peak <= 16.0 else "NO"
+        if md:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {_fmt_s(t['compute_s'])} | "
+                f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+                f"{t['dominant'].replace('_s','')} | "
+                f"{t['useful_flops_ratio']:.2f} | {peak:.2f} | {fits} |")
+        else:
+            lines.append(
+                f"{r['arch']:24s} {r['shape']:12s} "
+                f"C={_fmt_s(t['compute_s'])} M={_fmt_s(t['memory_s'])} "
+                f"X={_fmt_s(t['collective_s'])} dom={t['dominant']:13s} "
+                f"useful={t['useful_flops_ratio']:.2f} peak={peak:.1f}GiB")
+    if data.get("failures"):
+        lines.append("")
+        for f in data["failures"]:
+            lines.append(f"FAILED {f['arch']} x {f['shape']}: "
+                         f"{f['error'][:160]}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="benchmarks/dryrun_single_pod.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        data = json.load(f)
+    print(render(data, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Render the paper's Tables 2-4 cell-by-cell: measured (paper) vs the
+calibrated model's prediction — the per-table reproduction artifact.
+
+  PYTHONPATH=src python -m benchmarks.tables [--provider AWS]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import perfsim
+from repro.core.environments import MACHINES, MEASURED, NS_LADDER, PROVIDERS
+
+
+def render(provider: str) -> str:
+    models = {m: perfsim.fit_machine(provider, m) for m in MACHINES}
+    lines = [f"== Table ({provider}): latency s — paper / model ==",
+             "NS    " + "".join(f"{m:>15s}" for m in MACHINES)]
+    for ns in NS_LADDER:
+        cells = []
+        for m in MACHINES:
+            paper = MEASURED[provider][m][ns][0]
+            pred = float(models[m].predict_latency(ns))
+            cells.append(f"{paper:6.1f}/{pred:6.1f} ")
+        lines.append(f"{ns:<6d}" + "".join(cells))
+    mapes = [models[m].mape for m in MACHINES]
+    lines.append("MAPE  " + "".join(f"{x:>14.2f} " for x in mapes))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--provider", choices=PROVIDERS, default=None)
+    args = ap.parse_args()
+    for prov in ([args.provider] if args.provider else PROVIDERS):
+        print(render(prov))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Reproduce the paper's cross-cloud cost/performance study from its own
+published measurements: fit the per-machine performance models, validate the
+four headline findings, and print the cost tables (incl. the beyond-paper
+US$/1M-sentences metric).
+
+  PYTHONPATH=src python examples/cost_study.py
+"""
+import json
+
+from repro.core import analysis, costmodel, perfsim
+from repro.core.environments import MACHINES, PROVIDERS, instance
+
+
+def main():
+    print("== Table 5: monthly cost (US$) ==")
+    print(f"{'':8s}" + "".join(f"{m:>9s}" for m in MACHINES))
+    for prov in PROVIDERS:
+        row = [instance(prov, m).monthly_cost_usd for m in MACHINES]
+        print(f"{prov:8s}" + "".join(f"{v:9.2f}" for v in row))
+
+    print("\n== GPU cost premium (paper: 'average cost 300% higher') ==")
+    prem = costmodel.gpu_cost_premium()
+    for k, v in prem.items():
+        print(f"  {k:8s} GPU/CPU ratio = {v:.2f}x")
+    print("  -> Table 5 arithmetic gives ~2.5x; the 300% headline is the "
+          "paper's rounding of 'several-fold'. Both recorded.")
+
+    print("\n== Machine C vs E (the cache finding) ==")
+    for prov, sav in costmodel.machine_c_vs_e_saving().items():
+        print(f"  {prov:6s} cost saving C vs E: {sav*100:5.1f}%")
+    reg = perfsim.cpu_only_feature_regression()
+    print(f"  CPU-only throughput regression (standardized): "
+          f"{json.dumps({k: round(v, 3) for k, v in reg['coef'].items()})} "
+          f"R2={reg['r2']:.2f}")
+
+    print("\n== SLO capacity (max NS under 2 s) ==")
+    cap = analysis.slo_capacity_table()
+    print(f"{'':8s}" + "".join(f"{m:>6s}" for m in MACHINES))
+    for prov in PROVIDERS:
+        print(f"{prov:8s}" + "".join(f"{cap[prov][m]:6d}" for m in MACHINES))
+
+    print("\n== Beyond-paper: US$ per 1M sentences at best SLO point ==")
+    cpm = costmodel.cost_per_million_sentences()
+    for prov in PROVIDERS:
+        cells = " ".join(f"{m}:{cpm[prov][m]:7.2f}" for m in MACHINES)
+        print(f"  {prov:6s} {cells}")
+    print("  -> GPUs are 3-5x cheaper *per sentence* at full load — the "
+          "paper's '300% more expensive' inverts once utilization is "
+          "considered; its POC (low, bursty load) conclusion still holds.")
+
+    print("\n== All findings ==")
+    f = analysis.all_findings()
+    for k, v in f.items():
+        if isinstance(v, dict) and "holds" in v:
+            print(f"  {k:28s} holds={v['holds']}")
+    print(f"  perfsim mean MAPE over 210 latency cells: "
+          f"{f['perfsim_fit']['mean_mape']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

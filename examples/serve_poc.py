@@ -1,0 +1,83 @@
+"""The paper's POC, end to end on this host: deploy GECToR behind the
+serving engine and run the 2^N concurrent-sentences ladder (Fig. 7),
+producing a Tables-2-4-style latency/vCPU/RAM table — then repeat with the
+admission-control queue the paper proposes in §4 and compare.
+
+  PYTHONPATH=src python examples/serve_poc.py --max-ns 64 --repeats 2
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.corpus import CorpusConfig, GECCorpus
+from repro.core.gector import init_gector
+from repro.core.loadtest import format_table, run_ladder
+from repro.core.tags import TagVocab
+from repro.serving import EngineConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-ns", type=int, default=64,
+                    help="top of the 2^N ladder (paper: 512; CPU host "
+                         "default: 64)")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-inflight", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config("gector-base", smoke=True)
+    corpus = GECCorpus(CorpusConfig(vocab_size=cfg.vocab_size,
+                                    edit_words=256, seed=5))
+    params = init_gector(cfg, jax.random.PRNGKey(0), corpus.vocab)
+    sentences = [src for src, _, _ in corpus.generate(256)]
+    ladder = [n for n in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+              if n <= args.max_ns]
+
+    print(f"== GECToR-small MLaaS POC on this host "
+          f"(model {sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M "
+          f"params) ==")
+
+    print("\n-- baseline engine (paper's setup: no admission control) --")
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(mode="encoder",
+                                     max_batch=args.max_batch))
+    try:
+        cells = run_ladder(eng, sentences, ladder=ladder,
+                           repeats=args.repeats)
+    finally:
+        eng.close()
+    print(format_table(cells))
+    base_metrics = {c.ns: c for c in cells}
+
+    print("\n-- with admission-control queue (the paper's §4 proposal) --")
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(mode="encoder",
+                                     max_batch=args.max_batch,
+                                     max_inflight=args.max_inflight))
+    try:
+        cells_q = run_ladder(eng, sentences, ladder=ladder,
+                             repeats=args.repeats)
+        admission = eng.metrics()
+    finally:
+        eng.close()
+    print(format_table(cells_q))
+    print(f"\nadmission stats: peak queue "
+          f"{admission.get('admission_peak_queue')} | total wait "
+          f"{admission.get('admission_wait_total_s', 0):.2f}s")
+
+    print("\n-- paper-trend checks on this host --")
+    top = cells[-1]
+    print(f"latency grows with NS: "
+          f"{'OK' if top.latency_s > cells[0].latency_s else 'NO'} "
+          f"({cells[0].latency_s:.2f}s @1 -> {top.latency_s:.2f}s "
+          f"@{top.ns})")
+    spread = max(c.ram_pct for c in cells) - min(c.ram_pct for c in cells)
+    print(f"RAM flat across ladder (paper finding 4): "
+          f"{'OK' if spread < 10 else 'NO'} (spread {spread:.1f} pp)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end training driver — the paper's model (GECToR) trained on the
+synthetic NUCLE-statistics corpus for a few hundred steps, with tag-level
+F0.5 evaluation and checkpointing.
+
+  PYTHONPATH=src python examples/train_gector.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.corpus import CorpusConfig, GECCorpus
+from repro.core.gector import (gector_loss, init_gector, iterative_correct,
+                               predict_tags)
+from repro.core.tags import edit_f_beta
+from repro.training.checkpoint import save
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--train-error-rate", type=float, default=0.4,
+                    help="synthetic-pretraining error rate (GECToR trains "
+                         "on dense synthetic errors, evals on sparse)")
+    ap.add_argument("--ckpt", default="/tmp/gector_small.ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("gector-base", smoke=True)
+    train_corpus = GECCorpus(CorpusConfig(
+        vocab_size=cfg.vocab_size, edit_words=256,
+        error_rate=args.train_error_rate, seed=0))
+    vocab = train_corpus.vocab
+    params = init_gector(cfg, jax.random.PRNGKey(0), vocab)
+    oc = OptConfig(lr=args.lr, warmup_steps=30, total_steps=args.steps,
+                   weight_decay=0.01)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: gector_loss(cfg, pp, b), has_aux=True)(p)
+        p, o, gn = adamw_update(oc, p, g, o)
+        return p, o, l, m
+
+    t0 = time.time()
+    for i, b in enumerate(train_corpus.batches(args.batch, args.seq,
+                                               args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss, m = step(params, opt, batch)
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"tag_acc {float(m['tag_acc']):.3f} "
+                  f"edit_acc {float(m['edit_acc']):.3f} "
+                  f"[{time.time()-t0:.0f}s]")
+
+    # ---- eval on NUCLE-statistics test distribution (low error rate) ----
+    test = GECCorpus(CorpusConfig(vocab_size=cfg.vocab_size, edit_words=256,
+                                  error_rate=0.08, seed=99))
+    b = next(test.batches(128, args.seq, 1))
+    best = None
+    for gate in (0.0, 0.3, 0.5, 0.7):
+        pred = predict_tags(cfg, params, b["tokens"], b["mask"],
+                            min_error_prob=gate)
+        m = edit_f_beta(pred, b["tags"], b["mask"])
+        print(f"detect-gate {gate}: P={m['precision']:.3f} "
+              f"R={m['recall']:.3f} F0.5={m['f0.5']:.3f}")
+        if best is None or m["f0.5"] > best[1]["f0.5"]:
+            best = (gate, m)
+    print(f"best gate {best[0]} -> F0.5 {best[1]['f0.5']:.3f} "
+          f"(paper's reference GECToR: 0.653 on real CoNLL-2014)")
+
+    # ---- iterative correction improves token match ----
+    srcs, _, cleans = zip(*list(test.generate(64)))
+    fixed = iterative_correct(cfg, params, vocab, srcs)
+
+    def tok_match(a, b):
+        L = min(len(a), len(b))
+        return float(np.mean(np.asarray(a[:L]) == np.asarray(b[:L])))
+    before = np.mean([tok_match(s, c) for s, c in zip(srcs, cleans)])
+    after = np.mean([tok_match(f, c) for f, c in zip(fixed, cleans)])
+    print(f"token match vs clean: before={before:.4f} after={after:.4f}")
+
+    save(args.ckpt, {"params": params})
+    print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

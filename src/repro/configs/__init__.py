@@ -1,0 +1,32 @@
+"""Architecture config registry.
+
+Each module defines ``CONFIG`` (the exact assigned spec) and ``SMOKE`` (a
+reduced same-family variant: <=2-ish layers / one pattern period, d_model
+<= 512, <= 4 experts) used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "xlstm-125m": "xlstm_125m",
+    "stablelm-12b": "stablelm_12b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a6_6b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "gemma2-27b": "gemma2_27b",
+    "whisper-large-v3": "whisper_large_v3",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gector-base": "gector_base",
+}
+
+ARCHS = [a for a in _MODULES if a != "gector-base"]
+
+
+def get_config(name: str, smoke: bool = False):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,33 @@
+"""Gemma-2-27B [arXiv:2408.00118].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000, head_dim=128,
+alternating local(window 4096)/global attention, attn logit softcap 50,
+final logit softcap 30, post-norms, GeGLU, tied embeddings.
+
+long_500k runs under the documented *windowed-global* variant: global layers
+cap their effective window at 32768 during long-context decode
+(attn.long_ctx_window_cap) — the sliding-window carve-out of the shape rules.
+"""
+from repro.models.config import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b", arch_type="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16,
+    d_ff=36_864, vocab_size=256_000, head_dim=128,
+    pattern=("attn_local", "attn_global"),
+    act="gelu", post_norms=True, tie_embeddings=True,
+    final_logit_softcap=30.0,
+    attn=AttnConfig(window=4096, logit_softcap=50.0, rope_base=10_000.0,
+                    long_ctx_window_cap=32_768),
+)
+
+SMOKE = ModelConfig(
+    name="gemma2-27b-smoke", arch_type="dense",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=4,
+    d_ff=512, vocab_size=512, head_dim=32,
+    pattern=("attn_local", "attn_global"),
+    act="gelu", post_norms=True, tie_embeddings=True,
+    final_logit_softcap=30.0,
+    attn=AttnConfig(window=64, logit_softcap=50.0, rope_base=10_000.0,
+                    long_ctx_window_cap=128),
+)

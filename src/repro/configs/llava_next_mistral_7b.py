@@ -1,0 +1,24 @@
+"""LLaVA-NeXT (v1.6) Mistral-7B backbone [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000. The SigLIP/CLIP
+vision tower + projector are a STUB per the assignment: input_specs supplies
+pre-computed anyres patch embeddings (vis_tokens=2880 = 5 tiles x 576) that
+are interleaved (prefixed) before the text tokens.
+"""
+from repro.models.config import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", arch_type="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14_336, vocab_size=32_000,
+    vis_tokens=2880,
+    attn=AttnConfig(rope_base=1e6),
+)
+
+SMOKE = ModelConfig(
+    name="llava-next-mistral-7b-smoke", arch_type="vlm",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=2,
+    d_ff=512, vocab_size=512,
+    vis_tokens=16,
+    attn=AttnConfig(rope_base=1e6),
+)

@@ -1,0 +1,23 @@
+"""Qwen2-0.5B [arXiv:2407.10671].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936, QKV bias, tied
+embeddings. 14 heads do not divide the 16-way model axis -> attention is
+replicated; MLP and vocab remain model-sharded (see DESIGN.md).
+"""
+from repro.models.config import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", arch_type="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151_936,
+    tie_embeddings=True,
+    attn=AttnConfig(qkv_bias=True, rope_base=1e6),
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-0.5b-smoke", arch_type="dense",
+    n_layers=2, d_model=224, n_heads=14, n_kv_heads=2,
+    d_ff=512, vocab_size=512,
+    tie_embeddings=True,
+    attn=AttnConfig(qkv_bias=True, rope_base=1e6),
+)

@@ -1,0 +1,26 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (kv=16) vocab=151936; 60 routed experts top-4 with
+expert d_ff=1408 + 4 shared experts (4x1408 = 5632 fused shared width,
+matching the model card). 60 experts do not divide the 16-way model axis ->
+tensor-parallel expert sharding is auto-selected (see parallel.sharding).
+"""
+from repro.models.config import AttnConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", arch_type="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=151_936,
+    moe=MoEConfig(num_experts=60, top_k=4, num_shared_experts=4,
+                  expert_d_ff=1408),
+    attn=AttnConfig(qkv_bias=True, rope_base=1e6),
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-moe-a2.7b-smoke", arch_type="moe",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab_size=512,
+    moe=MoEConfig(num_experts=4, top_k=2, num_shared_experts=2,
+                  expert_d_ff=512),
+    attn=AttnConfig(qkv_bias=True, rope_base=1e6),
+)

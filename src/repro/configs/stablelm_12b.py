@@ -1,0 +1,20 @@
+"""StableLM-2-12B family [hf:stabilityai/stablelm-2-1_6b scaled per
+assignment]. 40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352.
+kv=8 < 16-way model axis -> KV projections replicated (see DESIGN.md)."""
+from repro.models.config import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b", arch_type="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=13_824, vocab_size=100_352,
+    norm="layernorm",
+    attn=AttnConfig(rope_base=10_000.0),
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-12b-smoke", arch_type="dense",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=2,
+    d_ff=512, vocab_size=512,
+    norm="layernorm",
+    attn=AttnConfig(rope_base=10_000.0),
+)

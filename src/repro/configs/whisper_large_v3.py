@@ -1,0 +1,28 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — encoder-decoder.
+
+Decoder (the assigned backbone): 32L d_model=1280 20H (kv=20) d_ff=5120
+vocab=51866 (padded to 51968 for even vocab-parallel sharding). Encoder: 32
+layers over 1500 stub frame embeddings — the mel-spectrogram + conv frontend
+is a STUB per the assignment (input_specs supplies (B, 1500, 1280)).
+Learned absolute positions, LayerNorm, GELU, non-gated MLP. 20 heads do not
+divide the 16-way axis -> attention replicated, MLP/vocab sharded.
+"""
+from repro.models.config import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", arch_type="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab_size=51_866,
+    enc_layers=32, enc_seq_len=1500,
+    norm="layernorm", act="gelu", gated_mlp=False, abs_pos=True,
+    attn=AttnConfig(rope_base=None),
+)
+
+SMOKE = ModelConfig(
+    name="whisper-large-v3-smoke", arch_type="audio",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab_size=512,
+    enc_layers=2, enc_seq_len=64,
+    norm="layernorm", act="gelu", gated_mlp=False, abs_pos=True,
+    attn=AttnConfig(rope_base=None),
+)

@@ -1,0 +1,27 @@
+"""xLSTM-125M [arXiv:2405.04517].
+
+12L d_model=768 4H, vocab=50304, d_ff=0 (blocks carry their own projections).
+5:1 mLSTM:sLSTM ratio -> pattern of five mLSTM + one sLSTM, two periods.
+Attention-free (recurrent state decode) -> long_500k admissible.
+"""
+from repro.models.config import AttnConfig, ModelConfig
+
+_PATTERN = ("mlstm",) * 5 + ("slstm",)
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", arch_type="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50_304,
+    pattern=_PATTERN,
+    attn=AttnConfig(rope_base=None),
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-125m-smoke", arch_type="ssm",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=512,
+    pattern=("mlstm", "slstm"),
+    attn=AttnConfig(rope_base=None),
+    tie_embeddings=True,
+)

@@ -1,0 +1,7 @@
+"""The paper's primary contribution: the MLaaS deployment study —
+GECToR (the deployed model), the cloud-environment matrix, the calibrated
+performance/cost models, and the load-test client."""
+from repro.core.corpus import CorpusConfig, GECCorpus  # noqa: F401
+from repro.core.environments import (INSTANCES, MEASURED, NS_LADDER,  # noqa
+                                     instance)
+from repro.core.tags import TagVocab, apply_edits, edit_f_beta  # noqa: F401

@@ -1,0 +1,181 @@
+"""The paper's experimental matrix as data.
+
+Table 1 — 21 instance scenarios (3 providers x 7 machine classes A-G).
+Table 5 — monthly cost in US$.
+Tables 2-4 — the paper's measured (latency s, vCPU %, RAM %) per Number of
+Sentences NS in {1,2,...,512}; these are the calibration/validation ground
+truth for core.perfsim.
+
+One beyond-paper row is added (TPU_V5E) for the cost comparison the paper
+could not run; it is excluded from all paper-claim validations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+NS_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+LATENCY_SLO_S = 2.0                       # the paper's acceptability threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    provider: str
+    machine: str                          # class letter A..G
+    instance_type: str
+    processor: str
+    clock_ghz: float
+    vcpus: int
+    cache_gb: Optional[float]             # None for GPU machines (unlisted)
+    ram_gb: int
+    gpu: Optional[str]
+    monthly_cost_usd: float
+
+
+INSTANCES = [
+    # ---- AWS ----
+    Instance("AWS", "A", "c6a.xlarge", "AMD EPYC 7R13", 2.95, 4, 2, 8, None, 110.16),
+    Instance("AWS", "B", "c6a.2xlarge", "AMD EPYC 7R13", 2.95, 8, 2, 16, None, 220.32),
+    Instance("AWS", "C", "t2.xlarge", "Intel Xeon Scalable", 3.3, 4, 4, 16, None, 133.63),
+    Instance("AWS", "D", "inf1.xlarge", "Intel Xeon Platinum 8275CL", 3.0, 4, 2, 8, None, 164.16),
+    Instance("AWS", "E", "inf1.2xlarge", "Intel Xeon Platinum 8275CL", 3.0, 8, 2, 16, None, 260.64),
+    Instance("AWS", "F", "g4dn.xlarge", "Intel Xeon Platinum 8259CL", 2.5, 4, None, 16, "NVIDIA T4", 378.72),
+    Instance("AWS", "G", "g4dn.2xlarge", "Intel Xeon Platinum 8259CL", 2.5, 8, None, 32, "NVIDIA T4", 541.44),
+    # ---- GCP ----
+    Instance("GCP", "A", "n2d-custom-4-8192", "AMD EPYC Milan 7B13", 3.5, 4, 2, 8, None, 100.44),
+    Instance("GCP", "B", "n2d-custom-8-16384", "AMD EPYC Milan 7B13", 3.5, 8, 2, 16, None, 200.87),
+    Instance("GCP", "C", "n2-custom-8-16384", "Intel Xeon Gold 6268CL", 3.9, 4, 4, 16, None, 230.89),
+    Instance("GCP", "D", "c3-highcpu-4", "Intel Xeon Platinum 8481C", 3.3, 4, 2, 8, None, 124.10),
+    Instance("GCP", "E", "c3-highcpu-8", "Intel Xeon Platinum 8481C", 3.3, 8, 2, 16, None, 248.21),
+    Instance("GCP", "F", "n1-standard-4", "Intel Xeon Platinum 8173M", 3.5, 4, None, 16, "NVIDIA T4", 388.80),
+    Instance("GCP", "G", "n1-standard-8", "Intel Xeon Platinum 8173M", 3.5, 8, None, 32, "NVIDIA T4", 525.60),
+    # ---- Azure ----
+    Instance("Azure", "A", "standard_B4als_v2", "AMD EPYC Milan 7763v", 3.5, 4, 2, 8, None, 95.76),
+    Instance("Azure", "B", "standard_B8als_v2", "AMD EPYC Milan 7763v", 3.5, 8, 2, 16, None, 191.52),
+    Instance("Azure", "C", "standard_D8lds_v5", "Intel Xeon Platinum 8370C", 3.5, 4, 4, 16, None, 276.48),
+    Instance("Azure", "D", "standard_F4s_v2", "Intel Xeon Platinum 8370C", 3.7, 4, 2, 8, None, 121.68),
+    Instance("Azure", "E", "standard_F8s_v2", "Intel Xeon Platinum 8370C", 3.7, 8, 2, 16, None, 243.36),
+    Instance("Azure", "F", "standard_NC4as_T4_v3", "AMD EPYC Rome 7V12", 3.3, 4, None, 28, "NVIDIA T4", 383.98),
+    Instance("Azure", "G", "standard_NC8as_T4_v3", "AMD EPYC Rome 7V12", 3.3, 8, None, 56, "NVIDIA T4", 548.96),
+    # ---- beyond-paper reference point (not part of claim validation) ----
+    Instance("TPU", "T", "v5e-1", "TPU v5e (197 TF bf16)", 0.94, 8, None, 16,
+             "TPU v5e", 850.0),
+]
+
+
+# (latency_s, vcpu_pct, ram_pct) per provider/machine/NS — Tables 2-4 verbatim.
+_T = Tuple[float, float, float]
+MEASURED: Dict[str, Dict[str, Dict[int, _T]]] = {
+    "AWS": {
+        "A": {1: (1.5, 1.5, 84), 2: (0.7, 2.4, 84), 4: (1.3, 3.9, 84),
+              8: (2.7, 12.5, 83), 16: (6.5, 38.4, 82), 32: (9.2, 71.8, 82),
+              64: (22.1, 99.1, 84), 128: (43.2, 100, 85),
+              256: (55.1, 100, 86), 512: (58.1, 100, 86)},
+        "B": {1: (0.5, 8.1, 63), 2: (0.3, 1.0, 63), 4: (0.7, 4.0, 62),
+              8: (0.9, 6.4, 62), 16: (1.8, 17.5, 59), 32: (2.7, 33, 56),
+              64: (4.8, 59.4, 54), 128: (9.7, 77.8, 55),
+              256: (17.9, 88.5, 55), 512: (29.5, 83.7, 56)},
+        "C": {1: (0.5, 0.5, 60), 2: (0.3, 1.4, 60), 4: (0.4, 2.1, 59),
+              8: (0.6, 4.5, 58), 16: (1.2, 17.5, 56), 32: (1.8, 26, 53),
+              64: (3.6, 42.6, 52), 128: (6.9, 62.7, 52),
+              256: (13, 85.6, 53), 512: (23.3, 78.9, 54)},
+        "D": {1: (1.4, 5.1, 86), 2: (0.5, 6.4, 86), 4: (0.6, 7.1, 85),
+              8: (0.9, 6.5, 85), 16: (2.2, 12.5, 84), 32: (3.7, 28.1, 83),
+              64: (7.9, 71.4, 84), 128: (14.6, 95.4, 85),
+              256: (29.5, 99, 86), 512: (42.2, 99.9, 87)},
+        "E": {1: (0.8, 0.8, 65), 2: (0.2, 0.5, 64), 4: (0.5, 0.9, 64),
+              8: (0.8, 2.5, 63), 16: (1.6, 6.8, 61), 32: (2.4, 15.5, 59),
+              64: (4.1, 36.5, 56), 128: (7.9, 62.6, 55),
+              256: (14.9, 91.2, 55), 512: (24.3, 90.3, 55)},
+        "F": {1: (1.2, 8, 87), 2: (0.4, 2.3, 86), 4: (0.2, 2.1, 86),
+              8: (0.2, 3.2, 86), 16: (0.2, 3.8, 86), 32: (0.3, 3.8, 86),
+              64: (0.5, 5, 86), 128: (0.9, 7.1, 86), 256: (1.6, 14.3, 86),
+              512: (2.9, 34, 86)},
+        "G": {1: (0.3, 0.2, 69), 2: (0.03, 0.3, 69), 4: (0.1, 0.4, 69),
+              8: (0.1, 0.5, 69), 16: (0.1, 0.8, 69), 32: (0.2, 0.9, 69),
+              64: (0.4, 2.1, 69), 128: (0.7, 3.9, 69), 256: (1.2, 14.4, 69),
+              512: (2.5, 30.1, 69)},
+    },
+    "GCP": {
+        "A": {1: (1.6, 0.7, 66), 2: (1.3, 3.6, 66), 4: (1.3, 6.7, 66),
+              8: (3.0, 20.1, 66), 16: (6.9, 49.2, 67), 32: (12.9, 81.9, 69),
+              64: (25.7, 99.2, 71), 128: (43.2, 100, 72),
+              256: (55.3, 100, 73), 512: (62.3, 100, 73)},
+        "B": {1: (0.3, 0.3, 47), 2: (0.3, 0.7, 47), 4: (1.0, 1.7, 47),
+              8: (1.1, 7.2, 47), 16: (1.8, 12.2, 47), 32: (2.6, 25.3, 47),
+              64: (5.0, 48.9, 48), 128: (9.9, 75.4, 49),
+              256: (18.6, 93.8, 50), 512: (39.5, 91.9, 50)},
+        "C": {1: (0.3, 0.4, 47), 2: (0.3, 0.9, 47), 4: (1.0, 1.6, 47),
+              8: (1.1, 6.6, 48), 16: (1.8, 11, 48), 32: (2.6, 28.1, 48),
+              64: (5.0, 56.1, 49), 128: (9.9, 80.1, 49),
+              256: (18.6, 99.1, 50), 512: (39.5, 100, 50)},
+        "D": {1: (1.2, 0.6, 65), 2: (1.1, 2.7, 66), 4: (0.7, 5.7, 66),
+              8: (1.1, 8, 66), 16: (2.5, 19.6, 67), 32: (4.6, 37.4, 68),
+              64: (8.3, 71.9, 69), 128: (16.8, 99.6, 70),
+              256: (33.2, 100, 71), 512: (48.1, 100, 72)},
+        "E": {1: (1.2, 0.2, 48), 2: (1.1, 0.5, 48), 4: (0.7, 0.9, 48),
+              8: (1.1, 4.2, 48), 16: (2.5, 9.6, 48), 32: (4.6, 17.9, 48),
+              64: (8.3, 35.5, 49), 128: (16.8, 59.9, 49),
+              256: (33.2, 83.4, 50), 512: (48.1, 93.3, 51)},
+        "F": {1: (1.3, 1.8, 94), 2: (0.8, 2.7, 94), 4: (0.5, 4.2, 94),
+              8: (0.2, 5.7, 94), 16: (0.3, 6.7, 94), 32: (0.4, 7.4, 94),
+              64: (0.8, 8.7, 94), 128: (1.4, 12.8, 94), 256: (2.4, 25.5, 94),
+              512: (4.3, 54.5, 94)},
+        "G": {1: (0.2, 0.4, 76), 2: (0.1, 0.5, 76), 4: (0.1, 0.6, 76),
+              8: (0.2, 0.9, 76), 16: (0.3, 1.3, 76), 32: (0.4, 2.3, 76),
+              64: (0.6, 5.2, 76), 128: (1.0, 6.9, 76), 256: (1.7, 17.3, 76),
+              512: (2.9, 29.6, 76)},
+    },
+    "Azure": {
+        "A": {1: (0.8, 0.5, 67), 2: (0.9, 2.9, 67), 4: (1.2, 5.8, 67),
+              8: (3.0, 19.9, 68), 16: (7.1, 55.5, 69), 32: (12.2, 81, 70),
+              64: (23.2, 98.1, 72), 128: (42.5, 100, 73),
+              256: (54.5, 100, 74), 512: (59.1, 100, 75)},
+        "B": {1: (0.2, 0.3, 49), 2: (0.3, 0.6, 49), 4: (1.5, 2.2, 49),
+              8: (1.2, 11, 49), 16: (1.7, 17, 49), 32: (2.6, 29.7, 50),
+              64: (4.8, 51.8, 50), 128: (9.4, 74.6, 51),
+              256: (17.9, 92.1, 52), 512: (39.2, 89.8, 52)},
+        "C": {1: (0.1, 0.5, 50), 2: (0.3, 0.7, 50), 4: (0.5, 1.6, 50),
+              8: (0.8, 4.4, 50), 16: (1.6, 9.6, 51), 32: (2.6, 22.4, 51),
+              64: (5.0, 52.4, 53), 128: (9.8, 78.1, 54),
+              256: (18.6, 98.8, 55), 512: (38.6, 99.5, 56)},
+        "D": {1: (0.8, 0.8, 74), 2: (0.7, 1.6, 74), 4: (0.7, 4.5, 74),
+              8: (1.4, 8.6, 75), 16: (2.7, 21.7, 76), 32: (5.3, 46, 78),
+              64: (9.6, 72.7, 80), 128: (20, 95.9, 81),
+              256: (37.8, 100, 82), 512: (52.2, 100, 83)},
+        "E": {1: (0.2, 0.4, 48), 2: (0.2, 0.6, 48), 4: (0.7, 1.4, 48),
+              8: (1.1, 4.8, 48), 16: (1.7, 10.5, 48), 32: (2.6, 22.3, 49),
+              64: (4.9, 46.9, 51), 128: (9.6, 75.8, 52),
+              256: (18.2, 98.6, 53), 512: (36.7, 98, 54)},
+        "F": {1: (0.2, 0.8, 82), 2: (0.1, 0.9, 82), 4: (0.1, 1.0, 82),
+              8: (0.1, 1.3, 82), 16: (0.2, 1.8, 82), 32: (0.3, 2.8, 82),
+              64: (0.5, 5.4, 82), 128: (0.8, 8.6, 82), 256: (1.5, 16.7, 82),
+              512: (2.7, 34.9, 82)},
+        "G": {1: (0.1, 0.5, 41), 2: (0.1, 0.5, 41), 4: (0.1, 0.5, 41),
+              8: (0.1, 0.6, 41), 16: (0.2, 0.9, 41), 32: (0.3, 1.3, 41),
+              64: (0.5, 2.7, 41), 128: (0.8, 5.5, 41), 256: (1.4, 10.7, 41),
+              512: (2.5, 24.9, 41)},
+    },
+}
+
+PROVIDERS = ("AWS", "GCP", "Azure")
+MACHINES = tuple("ABCDEFG")
+
+
+def instance(provider: str, machine: str) -> Instance:
+    for inst in INSTANCES:
+        if inst.provider == provider and inst.machine == machine:
+            return inst
+    raise KeyError((provider, machine))
+
+
+def latency(provider: str, machine: str, ns: int) -> float:
+    return MEASURED[provider][machine][ns][0]
+
+
+def vcpu_load(provider: str, machine: str, ns: int) -> float:
+    return MEASURED[provider][machine][ns][1]
+
+
+def ram_load(provider: str, machine: str, ns: int) -> float:
+    return MEASURED[provider][machine][ns][2]

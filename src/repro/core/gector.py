@@ -1,0 +1,112 @@
+"""GECToR in JAX (Omelianchuk et al., 2020) — the paper's deployed model.
+
+A bidirectional transformer encoder (BERT-style: learned absolute positions,
+LayerNorm, GELU — configs/gector_base.py) "stacked with two linear layers
+with a softmax layer on top": an error-*detection* head and an edit-*tag*
+head. Inference is iterative: predict tags, apply edits, re-run, for up to
+``max_iters`` rounds or until every tag is KEEP — exactly the GECToR serving
+loop the paper load-tests.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tags import KEEP, TagVocab, apply_edits
+from repro.models import forward, init_params
+from repro.models.layers import dense_init, split_keys
+
+
+def init_gector(cfg, rng, tag_vocab: TagVocab):
+    ks = split_keys(rng, 3)
+    params = {"encoder": init_params(cfg, ks[0])}
+    params["detect_head"] = {
+        "w": dense_init(ks[1], (cfg.d_model, 2), cfg.d_model, jnp.float32)}
+    params["label_head"] = {
+        "w": dense_init(ks[2], (cfg.d_model, tag_vocab.n_tags), cfg.d_model,
+                        jnp.float32)}
+    return params
+
+
+def gector_forward(cfg, params, tokens, mask=None):
+    """tokens: (B, S) -> (tag_logits (B,S,T), detect_logits (B,S,2))."""
+    pos = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                           tokens.shape)
+    hid, _, _ = forward(cfg, params["encoder"], tokens=tokens, positions=pos,
+                        causal=False, return_hidden=True)
+    hid = hid.astype(jnp.float32)
+    tag_logits = hid @ params["label_head"]["w"]
+    det_logits = hid @ params["detect_head"]["w"]
+    return tag_logits, det_logits
+
+
+def gector_loss(cfg, params, batch, *, keep_weight: float = 0.2):
+    """CE on edit tags + CE on the binary detect head (paper architecture);
+    masked by valid tokens. KEEP is downweighted (GECToR's class-imbalance
+    handling: ~90% of tokens are correct, so an unweighted loss collapses to
+    the all-KEEP predictor)."""
+    tags = batch["tags"]
+    mask = batch["mask"]
+    tag_logits, det_logits = gector_forward(cfg, params, batch["tokens"])
+    logp = jax.nn.log_softmax(tag_logits, axis=-1)
+    nll_tag = -jnp.take_along_axis(logp, tags[..., None], axis=-1)[..., 0]
+    w = jnp.where(tags == KEEP, keep_weight, 1.0) * mask
+    det_target = (tags != KEEP).astype(jnp.int32)
+    logp_d = jax.nn.log_softmax(det_logits, axis=-1)
+    nll_det = -jnp.take_along_axis(logp_d, det_target[..., None],
+                                   axis=-1)[..., 0]
+    denom = jnp.maximum(w.sum(), 1e-6)
+    loss = jnp.sum((nll_tag + 0.5 * nll_det) * w) / denom
+    denom_m = jnp.maximum(mask.sum(), 1)
+    acc = jnp.sum((jnp.argmax(tag_logits, -1) == tags) * mask) / denom_m
+    edit_mask = (tags != KEEP) & mask
+    edit_acc = (jnp.sum((jnp.argmax(tag_logits, -1) == tags) * edit_mask)
+                / jnp.maximum(edit_mask.sum(), 1))
+    return loss, {"tag_acc": acc, "edit_acc": edit_acc}
+
+
+def predict_tags(cfg, params, tokens_batch: np.ndarray,
+                 mask: np.ndarray, *, min_error_prob: float = 0.0):
+    """Argmax tags, optionally gated by the detect head (GECToR's
+    confidence-bias trick)."""
+    tag_logits, det_logits = jax.jit(gector_forward, static_argnums=0)(
+        cfg, params, jnp.asarray(tokens_batch))
+    tags = np.asarray(jnp.argmax(tag_logits, -1))
+    if min_error_prob > 0:
+        perr = np.asarray(jax.nn.softmax(det_logits, -1))[..., 1]
+        tags = np.where(perr >= min_error_prob, tags, KEEP)
+    return np.where(mask, tags, KEEP)
+
+
+def iterative_correct(cfg, params, vocab: TagVocab,
+                      sentences: Sequence[np.ndarray], *, max_iters: int = 4,
+                      max_len: int = 128) -> List[np.ndarray]:
+    """The GECToR inference loop: tag -> apply -> repeat while edits fire."""
+    current = [np.asarray(s)[:max_len] for s in sentences]
+    active = list(range(len(current)))
+    for _ in range(max_iters):
+        if not active:
+            break
+        L = max(len(current[i]) for i in active)
+        L = min(max(L, 1), max_len)
+        toks = np.zeros((len(active), L), np.int32)
+        msk = np.zeros((len(active), L), bool)
+        for row, i in enumerate(active):
+            n = min(len(current[i]), L)
+            toks[row, :n] = current[i][:n]
+            msk[row, :n] = True
+        tags = predict_tags(cfg, params, toks, msk)
+        still = []
+        for row, i in enumerate(active):
+            n = int(msk[row].sum())
+            if np.all(tags[row, :n] == KEEP):
+                continue
+            current[i] = np.array(
+                apply_edits(vocab, toks[row, :n], tags[row, :n]),
+                np.int64)[:max_len]
+            still.append(i)
+        active = still
+    return current

@@ -1,0 +1,109 @@
+"""Load-test client — the paper's simulation flow (Fig. 7) against our
+engine: submit 2^N concurrent sentences (N = 0..9), repeat R times, record
+latency plus host CPU%/RAM% sampled from /proc (the Prometheus role).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.environments import NS_LADDER
+
+
+def _read_proc_stat():
+    with open("/proc/stat") as f:
+        parts = f.readline().split()
+    vals = list(map(int, parts[1:]))
+    idle = vals[3] + vals[4]
+    return sum(vals), idle
+
+
+def _ram_pct() -> float:
+    info = {}
+    with open("/proc/meminfo") as f:
+        for line in f:
+            k, v = line.split(":")
+            info[k] = int(v.split()[0])
+    return 100.0 * (1 - info["MemAvailable"] / info["MemTotal"])
+
+
+class CpuSampler:
+    def __init__(self, period_s: float = 0.1):
+        self.period = period_s
+        self.samples: List[float] = []
+        self._stop = threading.Event()
+        self._t: Optional[threading.Thread] = None
+
+    def __enter__(self):
+        def run():
+            prev = _read_proc_stat()
+            while not self._stop.wait(self.period):
+                cur = _read_proc_stat()
+                dt, didle = cur[0] - prev[0], cur[1] - prev[1]
+                if dt > 0:
+                    self.samples.append(100.0 * (1 - didle / dt))
+                prev = cur
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._t.join(timeout=2)
+        return False
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples)) if self.samples else 0.0
+
+
+@dataclasses.dataclass
+class LoadCell:
+    ns: int
+    latency_s: float        # mean completion wall time of the batch
+    latency_p95_s: float
+    vcpu_pct: float
+    ram_pct: float
+    repeats: int
+
+
+def run_ladder(engine, sentences: Sequence[np.ndarray], *,
+               ladder=NS_LADDER, repeats: int = 3,
+               rng_seed: int = 0, warmup: bool = True) -> List[LoadCell]:
+    """For each NS on the ladder: fire NS sentences simultaneously at the
+    engine, wait for all, measure wall latency; repeat; tabulate — the
+    paper's Tables 2-4 procedure (theirs: 10 repeats on real clouds)."""
+    rng = np.random.default_rng(rng_seed)
+    if warmup:  # exclude jit compilation from the first ladder cell
+        engine.submit(sentences[0]).result(timeout=600)
+        engine.latencies.clear()
+        engine.batch_sizes.clear()
+    cells = []
+    for ns in ladder:
+        lats = []
+        with CpuSampler() as cpu:
+            for _ in range(repeats):
+                idx = rng.integers(0, len(sentences), ns)
+                batch = [sentences[i] for i in idx]
+                t0 = time.perf_counter()
+                futs = [engine.submit(s) for s in batch]
+                for f in futs:
+                    f.result(timeout=600)
+                lats.append(time.perf_counter() - t0)
+        cells.append(LoadCell(ns=ns, latency_s=float(np.mean(lats)),
+                              latency_p95_s=float(np.percentile(lats, 95)),
+                              vcpu_pct=cpu.mean, ram_pct=_ram_pct(),
+                              repeats=repeats))
+    return cells
+
+
+def format_table(cells: List[LoadCell]) -> str:
+    lines = ["NS    latency(s)  p95(s)   vCPU%   RAM%"]
+    for c in cells:
+        lines.append(f"{c.ns:<5d} {c.latency_s:>9.3f} {c.latency_p95_s:>8.3f}"
+                     f" {c.vcpu_pct:>7.1f} {c.ram_pct:>6.1f}")
+    return "\n".join(lines)

@@ -1,0 +1,94 @@
+"""Single-step GQA decode attention over a (ring-buffered) KV cache.
+
+Grid: (batch*kv_heads, kv_blocks). Each program attends the G grouped query
+heads of one kv head against one KV block; running (m, l, acc) state sits in
+VMEM scratch across the KV sweep. Validity comes from the cache's absolute
+position buffer (pos < 0 = empty slot), so ring-buffer wraparound and
+sliding windows fall out of the same mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, window, softcap, n_kv):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (G, D)
+    k = k_ref[0]                                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qpos_ref[0]                            # scalar-ish (1,)
+    kv_pos = kvpos_ref[0]                          # (bk,)
+    mask = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "bk", "interpret"))
+def decode_attention(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
+                     bk=128, interpret=True):
+    """q: (BHkv, G, D); k/v: (BHkv, L, D); q_pos: (BHkv, 1) int32;
+    kv_pos: (BHkv, L) int32 (-1 = empty). L % bk == 0. -> (BHkv, G, D)."""
+    BHkv, G, D = q.shape
+    L = k.shape[1]
+    n_kv = L // bk
+    grid = (BHkv, n_kv)
+    kern = functools.partial(_kernel, scale=D ** -0.5, window=window,
+                             softcap=softcap, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0)),
+            pl.BlockSpec((1, G, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bh, ki: (bh, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q, k, v, kv_pos)

@@ -1,0 +1,98 @@
+"""Block-wise online-softmax (flash) attention Pallas kernel.
+
+Grid: (batch*q_heads, q_blocks, kv_blocks); the kv dimension is the minor
+(sequential) grid axis, so the fp32 (m, l, acc) running state lives in VMEM
+scratch across the KV sweep. GQA is zero-copy: the kv BlockSpec index map
+divides the head program id by the group size. Supports causal masking,
+sliding windows (gemma2 local layers / windowed-global long-context) and
+logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, bq, bk, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                  # (bq, D)
+    k = k_ref[0]                                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    bq=128, bk=128, interpret=True):
+    """q: (BH, Sq, D); k/v: (BHkv, Skv, D), BH = BHkv * G. Sq % bq == 0,
+    Skv % bk == 0 (pad at the ops layer). Returns (BH, Sq, D) in q.dtype."""
+    BH, Sq, D = q.shape
+    BHkv, Skv, _ = k.shape
+    G = BH // BHkv
+    n_kv = Skv // bk
+    grid = (BH, Sq // bq, n_kv)
+    kern = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denominator
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

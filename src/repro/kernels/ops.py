@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels: padding to block
+multiples, head reshaping, and CPU/TPU dispatch (interpret=True off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_matmul import cache_matmul, vmem_bytes  # noqa: F401
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, axis, mult, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def matmul(x, w, *, bm=128, bn=128, bk=128):
+    """Pad-and-dispatch VMEM-tiled matmul. x: (..., K); w: (K, N)."""
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, x.shape[-1])
+    x2 = _pad_axis(_pad_axis(x2, 0, bm), 1, bk)
+    w2 = _pad_axis(_pad_axis(w, 0, bk), 1, bn)
+    out = cache_matmul(x2, w2, bm=bm, bn=bn, bk=bk,
+                       interpret=not _on_tpu())
+    return out[:M, : w.shape[1]].reshape(*lead, w.shape[1])
+
+
+def mha_prefill(q, k, v, *, causal=True, window=None, softcap=None,
+                bq=128, bk=128):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    qf = _pad_axis(qf, 1, bq)
+    kf = _pad_axis(kf, 1, bk)
+    vf = _pad_axis(vf, 1, bk)
+    # padded kv columns must never win the max: they are masked because
+    # causal k_pos > real q_pos... guard explicitly via window-free pad mask
+    out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                          softcap=softcap, bq=bq, bk=bk,
+                          interpret=not _on_tpu())
+    out = out[:, :Sq].reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    return out
+
+
+def gqa_decode(q, k, v, q_pos, kv_pos, *, window=None, softcap=None, bk=128):
+    """q: (B, 1, Hq, D); k/v cache: (B, L, Hkv, D); q_pos: (B,);
+    kv_pos: (B, L) -> (B, 1, Hq, D)."""
+    B, _, Hq, D = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q[:, 0].reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
+    kf = _pad_axis(kf, 1, bk)
+    vf = _pad_axis(vf, 1, bk)
+    kvp = jnp.repeat(kv_pos, Hkv, axis=0)                 # (B*Hkv, L)
+    kvp = _pad_axis(kvp, 1, bk, value=-1)
+    qp = jnp.repeat(q_pos[:, None], Hkv, axis=0).reshape(B * Hkv, 1)
+    out = decode_attention(qf, kf, vf, qp, kvp, window=window,
+                           softcap=softcap, bk=bk, interpret=not _on_tpu())
+    return out.reshape(B, Hkv * G, D)[:, None]
+
+
+def lru_scan(a, b, *, bs=256):
+    """Pad-and-dispatch RG-LRU linear scan. a/b: (B, S, W)."""
+    from repro.kernels.rglru_scan import rglru_scan
+    S = a.shape[1]
+    ap = _pad_axis(a.astype(jnp.float32), 1, bs, value=1.0)  # a=1: identity
+    bp = _pad_axis(b.astype(jnp.float32), 1, bs, value=0.0)  # b=0: carry
+    out = rglru_scan(ap, bp, bs=bs, interpret=not _on_tpu())
+    return out[:, :S]

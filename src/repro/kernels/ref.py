@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose the
+kernels (interpret=True on CPU) against these across shape/dtype sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: (BH, Sq, D); k/v: (BHkv, Skv, D) with BH = BHkv * G (grouped).
+    Returns (BH, Sq, D) float32."""
+    BH, Sq, D = q.shape
+    BHkv, Skv, _ = k.shape
+    G = BH // BHkv
+    kx = jnp.repeat(k, G, axis=0)
+    vx = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vx.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k, v, q_pos, kv_pos, *, window=None,
+                         softcap=None):
+    """q: (BHkv, G, D); k/v: (BHkv, L, D); q_pos: (BHkv,); kv_pos: (BHkv, L)
+    (-1 = empty slot). Returns (BHkv, G, D) float32."""
+    D = q.shape[-1]
+    s = jnp.einsum("bgd,bld->bgl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        mask &= kv_pos > (q_pos[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgl,bld->bgd", p, v.astype(jnp.float32))
+
+
+def rglru_scan_ref(a, b):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    a, b: (B, S, W) -> (B, S, W)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

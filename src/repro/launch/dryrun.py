@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and extract the roofline
+terms. This is the proof that the distribution config is coherent without
+real hardware. MUST be run as its own process (the XLA_FLAGS line above has
+to execute before any jax import anywhere).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+  ... add --multi-pod for the 2x16x16 = 512-chip mesh.
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCHS, get_config                 # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.specs import build_step                   # noqa: E402
+from repro.models.config import SHAPES                      # noqa: E402
+from repro.parallel.sharding import rules_for, use_rules    # noqa: E402
+
+# ---- TPU v5e hardware model (per chip) ----
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DT_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+             "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+             "u16": 2, "c64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum tensor sizes flowing through collectives in the (post-SPMD,
+    per-device) optimized HLO. Methodology: the *result* shape of each
+    collective op is counted once — a per-device upper bound consistent
+    across configs (operands of all-reduce equal its result; all-gather
+    results count the gathered size each device materializes)."""
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] += n * _DT_BYTES.get(dt, 4)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D per generated/scored
+    token otherwise."""
+    n_act = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch      # one token per request
+
+
+def admissible(arch: str, shape_name: str) -> bool:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return False
+    return True
+
+
+def _compile_once(cfg, shape, rules, mesh, kw):
+    fn, args, shardings = build_step(cfg, shape, rules, **kw)
+    # donate the state pytrees (params+opt for train, the KV/recurrent cache
+    # for serving) — the production configuration; without it XLA double-
+    # buffers multi-GiB state (temp 19.4 -> ~6 GiB on gemma2-27b train_4k)
+    donate = (0, 1) if shape.mode == "train" else (1,)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        return lowered.compile()
+
+
+def measure_costs(cfg, shape, rules, mesh, kw) -> dict:
+    """Per-device FLOPs/bytes/collective-bytes, corrected for XLA's
+    count-while-bodies-once behaviour by depth differencing: compile 1- and
+    2-period variants in COST_MODE (inner loops collapsed) and extrapolate
+    linearly to the full period count. See runtime_flags.COST_MODE."""
+    from repro.models import runtime_flags
+    plen = len(cfg.pattern)
+    meas = []
+    runtime_flags.set_cost_mode(True)
+    try:
+        for mult in (1, 2):
+            repl = {"n_layers": plen * mult}
+            if cfg.enc_layers:
+                repl["enc_layers"] = mult
+            cfg_s = dataclasses.replace(cfg, **repl)
+            compiled = _compile_once(cfg_s, shape, rules, mesh, kw)
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+            meas.append({
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(coll["total_bytes"]),
+                "coll_detail": coll,
+            })
+    finally:
+        runtime_flags.set_cost_mode(False)
+    # NOTE: for enc-dec (whisper) enc_layers == n_layers, so the same P-1
+    # multiplier extrapolates encoder and decoder stacks together.
+    P = cfg.n_periods
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        d = meas[1][key] - meas[0][key]
+        out[key] = meas[0][key] + max(d, 0.0) * (P - 1)
+    out["per_period"] = {k: meas[1][k] - meas[0][k]
+                         for k in ("flops", "bytes", "coll")}
+    out["base"] = meas[0]
+    out["coll_detail_period"] = meas[1]["coll_detail"]
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod=False, seq_shard=None,
+            verbose=True, with_costs=True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not admissible(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped":
+                "full-attention arch at 500k decode (see DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh, multi_pod=multi_pod)
+    if seq_shard is None:
+        seq_shard = shape.mode == "train"   # optimized default (see §Perf)
+    kw = {"seq_shard": seq_shard} if shape.mode == "train" else {}
+
+    t0 = time.time()
+    with use_rules(rules):
+        compiled = _compile_once(cfg, shape, rules, mesh, kw)
+        t1 = time.time()
+        if with_costs:
+            costs = measure_costs(cfg, shape, rules, mesh, kw)
+        else:   # multi-pod pass: lower+compile proof only (roofline is
+            costs = {"flops": 0.0, "bytes": 0.0, "coll": 0.0,  # single-pod)
+                     "per_period": {}, "coll_detail_period": {}}
+
+    mem = compiled.memory_analysis()
+    coll = {"total_bytes": costs["coll"],
+            "detail": costs["coll_detail_period"]}
+    n_chips = mesh.size
+
+    flops_dev = costs["flops"]
+    bytes_dev = costs["bytes"]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": float(coll["total_bytes"]) / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_s": round(t1 - t0, 1),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": float(coll["total_bytes"]),
+            "collective_detail": coll["detail"],
+            "per_period": costs["per_period"],
+            "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+            # XLA's liveness-based peak + resident state (args). The CPU
+            # backend ignores donation and reports temp without reuse, so
+            # temp_bytes overstates; this is the HBM-fit criterion.
+            "peak_bytes": float(
+                getattr(mem, "peak_memory_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)),
+            # donation-adjusted: on TPU the donated state (params+opt for
+            # train, the KV cache for serving) aliases its output, so the
+            # output copy the CPU backend counts does not exist there
+            "adjusted_peak_bytes": float(
+                getattr(mem, "peak_memory_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                - min(getattr(mem, "output_size_in_bytes", 0),
+                      getattr(mem, "argument_size_in_bytes", 0))),
+        },
+        "roofline": {**{k: terms[k] for k in terms},
+                     "dominant": dominant,
+                     "model_flops_total": mf,
+                     "useful_flops_ratio":
+                         mf / max(flops_dev * n_chips, 1.0)},
+        "seq_shard": seq_shard,
+    }
+    if verbose:
+        pd = rec["per_device"]
+        print(f"[{arch} x {shape_name} @ {rec['mesh']}] "
+              f"compile {rec['compile_s']}s | "
+              f"flops/dev {pd['hlo_flops']:.3e} | "
+              f"bytes/dev {pd['hlo_bytes']:.3e} | "
+              f"coll/dev {pd['collective_bytes']:.3e} | "
+              f"peak/dev {pd['peak_bytes']/2**30:.2f} GiB | "
+              f"dominant={dominant}")
+        print(f"  roofline: compute {terms['compute_s']*1e3:.2f} ms, "
+              f"memory {terms['memory_s']*1e3:.2f} ms, "
+              f"collective {terms['collective_s']*1e3:.2f} ms | "
+              f"useful-flops ratio "
+              f"{rec['roofline']['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-shard", type=int, default=None,
+                    help="override train seq sharding (0/1)")
+    ap.add_argument("--no-costs", action="store_true",
+                    help="skip the cost-measurement compiles (compile-proof "
+                         "only; used for the multi-pod pass)")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in ARCHS for s in
+                 ("train_4k", "prefill_32k", "decode_32k", "long_500k")]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        pairs = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    seq_shard = None if args.seq_shard is None else bool(args.seq_shard)
+    results, failures = [], []
+    for arch, shp in pairs:
+        for mp in meshes:
+            try:
+                results.append(run_one(arch, shp, multi_pod=mp,
+                                       seq_shard=seq_shard,
+                                       with_costs=not args.no_costs))
+            except Exception as e:  # noqa: BLE001 — a failure IS the signal
+                print(f"FAILED [{arch} x {shp} mp={mp}]: {e}",
+                      file=sys.stderr)
+                failures.append({"arch": arch, "shape": shp,
+                                 "multi_pod": mp, "error": str(e)[:2000]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f,
+                      indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

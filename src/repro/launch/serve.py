@@ -1,0 +1,65 @@
+"""Serving launcher: stands up the MLaaS engine for any arch (decoder modes)
+or GECToR (encoder mode) and optionally runs the load-test ladder against
+it — the deployable version of examples/serve_poc.py.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.loadtest import format_table, run_ladder
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+from repro.training.checkpoint import restore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gector-base",
+                    choices=ARCHS + ["gector-base"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--ladder", type=int, nargs="*", default=None)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-inflight", type=int, default=None)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.ckpt:
+        params = restore(args.ckpt)["params"]
+        if "encoder" in params:          # gector checkpoint
+            params = params["encoder"]
+    else:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+    mode = "encoder" if cfg.arch_type == "encoder" else "decoder"
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(mode=mode, max_batch=args.max_batch,
+                                     max_inflight=args.max_inflight,
+                                     max_new_tokens=args.max_new_tokens))
+    try:
+        sentences = [np.random.randint(0, cfg.vocab_size,
+                                       (np.random.randint(8, 32),))
+                     for _ in range(max(args.requests, 32))]
+        if args.ladder:
+            cells = run_ladder(eng, sentences, ladder=tuple(args.ladder),
+                               repeats=1)
+            print(format_table(cells))
+        else:
+            futs = [eng.submit(s) for s in sentences[: args.requests]]
+            for f in futs:
+                f.result(timeout=600)
+            print("metrics:", eng.metrics())
+    finally:
+        eng.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""ShapeDtypeStruct input specs and sharding trees for every
+(architecture x input shape x mesh) combination — the dry-run's core.
+
+Nothing here allocates device memory: parameters/optimizer/caches come from
+``jax.eval_shape`` and inputs are ShapeDtypeStructs, so full-scale configs
+(27B params, 500k-token caches) lower on a CPU host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import init_params, make_caches
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.parallel.sharding import (MeshRules, param_partition_specs,
+                                     rules_for)
+from repro.training.optimizer import adamw_init, opt_state_specs
+from repro.training.train_loop import train_step
+
+
+# ----------------------------------------------------------- shape helpers
+def _batch_axes(rules: MeshRules):
+    return rules.batch_axes if len(rules.batch_axes) > 1 \
+        else rules.batch_axes[0]
+
+
+def _batch_size_divisible(rules: MeshRules, b: int) -> bool:
+    n = 1
+    for a in rules.batch_axes:
+        n *= rules.axis_size(a)
+    return b % n == 0 and b >= n
+
+
+def batch_spec(rules: MeshRules, b: int, extra=(None,)) -> P:
+    if _batch_size_divisible(rules, b):
+        return P(_batch_axes(rules), *extra)
+    return P(None, *extra)
+
+
+# ------------------------------------------------------------ cache specs
+def cache_partition_specs(cfg: ModelConfig, cache_shapes, rules: MeshRules,
+                          batch: int):
+    """Specs for the stacked cache pytree. If the batch dim is divisible by
+    the data axes it is sharded there; otherwise (long_500k, B=1) attention
+    cache *sequence* dims shard over the data axes instead (cache sequence
+    parallelism). KV head dims shard over 'model' when divisible."""
+    seq_shard = not _batch_size_divisible(rules, batch)
+    b_ax = None if seq_shard else _batch_axes(rules)
+    s_ax = _batch_axes(rules) if seq_shard else None
+    msize = rules.axis_size(rules.model_axis)
+    kv_ax = rules.model_axis if (cfg.n_kv_heads % msize == 0
+                                 and rules.shard_attn_heads) else None
+    # when kv heads can't shard (GQA kv < axis, e.g. stablelm kv=8), shard
+    # the cache *sequence* over the model axis — otherwise a decode_32k
+    # cache replicates on the model axis (111 GiB/device for stablelm-12b).
+    # (head_dim sharding was tried first and refuted: GSPMD all-gathers the
+    # fp32-converted cache for the QK contraction — §Perf iteration A.)
+    kv_seq_ax = (rules.model_axis if kv_ax is None else None)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name in ("ck", "cv"):      # cross-KV (P, B, T_enc, Hkv, hd)
+            return P(None, b_ax, None, kv_ax, None)
+        if name in ("k", "v"):        # (P, B, L, Hkv, hd)
+            L = leaf.shape[2]
+            s = s_ax if (s_ax and L % _bs(rules) == 0) else None
+            if s is None and kv_seq_ax and L % msize == 0:
+                s = kv_seq_ax
+            return P(None, b_ax, s, kv_ax, None)
+        if name == "pos":             # (P, B, L)
+            L = leaf.shape[2]
+            s = s_ax if (s_ax and L % _bs(rules) == 0) else None
+            if s is None and kv_seq_ax and L % msize == 0:
+                s = kv_seq_ax
+            return P(None, b_ax, s)
+        if name == "len":             # (P, B)
+            return P(None, b_ax)
+        if name == "C":               # mlstm (P, B, nh, hd, hd)
+            return P(None, b_ax, None, None, None)
+        if name in ("n", "m", "c", "h"):
+            if nd == 3 and name == "h":   # rglru h: (P, B, W)
+                w = leaf.shape[-1]
+                return P(None, b_ax,
+                         rules.model_axis if w % msize == 0 else None)
+            return P(*([None, b_ax] + [None] * (nd - 2)))
+        if name == "conv":            # (P, B, 3, W)
+            w = leaf.shape[-1]
+            return P(None, b_ax, None,
+                     rules.model_axis if w % msize == 0 else None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _bs(rules: MeshRules) -> int:
+    n = 1
+    for a in rules.batch_axes:
+        n *= rules.axis_size(a)
+    return n
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.mode == "train":
+        s_text = S - cfg.vis_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text + 1), jnp.int32)
+        if cfg.vis_tokens:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_layers:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+    elif shape.mode == "prefill":
+        s_text = S - cfg.vis_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        if cfg.vis_tokens:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_layers:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+    else:  # decode: ONE new token against a seq_len KV cache. Enc-dec
+        # models need no encoder input — cross-KV is cached at prefill.
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["positions"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return specs
+
+
+def input_shardings(cfg, shape, rules: MeshRules):
+    mesh = rules.mesh
+    B = shape.global_batch
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        extra = (None,) * (len(sds.shape) - 1)
+        out[name] = NamedSharding(mesh, batch_spec(rules, B, extra))
+    return out
+
+
+# -------------------------------------------------------------- step fns
+def param_shapes(cfg) -> dict:
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules, *,
+                oc=None, seq_shard: bool = False):
+    """Returns (fn, arg_specs, in_shardings) for jit-lowering train_step."""
+    from repro.training.optimizer import OptConfig
+    oc = oc or OptConfig()
+    mesh = rules.mesh
+    pshapes = param_shapes(cfg)
+    pspecs = param_partition_specs(pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    ospecs = opt_state_specs(pspecs, pshapes, rules)
+    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    bshard = input_shardings(cfg, shape, rules)
+    # map engine input names to train batch keys
+    bshard = {{"enc_embeds": "enc_embeds"}.get(k, k): v
+              for k, v in bshard.items()}
+
+    def fn(params, opt_state, batch):
+        return train_step(cfg, oc, params, opt_state, batch, remat=True,
+                          seq_shard=seq_shard)
+
+    args = (pshapes, jax.eval_shape(adamw_init, pshapes),
+            input_specs(cfg, shape))
+    return fn, args, (pshard, oshard, bshard)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    from repro.models import forward
+    mesh = rules.mesh
+    B, S = shape.global_batch, shape.seq_len
+    pshapes = param_shapes(cfg)
+    pspecs = param_partition_specs(pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    cshapes = jax.eval_shape(
+        lambda: make_caches(cfg, B, min(S, cfg.max_seq_len)))
+    cspecs = cache_partition_specs(cfg, cshapes, rules, B)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    ishard = input_shardings(cfg, shape, rules)
+
+    def fn(params, caches, inputs):
+        kw = {}
+        if "prefix_embeds" in inputs:
+            kw["prefix_embeds"] = inputs["prefix_embeds"]
+        if "enc_embeds" in inputs:
+            kw["enc_tokens_embeds"] = inputs["enc_embeds"]
+        logits, caches, _ = forward(cfg, params, tokens=inputs["tokens"],
+                                    caches=caches, mode="full", **kw)
+        # serving prefill returns only the last-position logits
+        return logits[:, -1], caches
+
+    args = (pshapes, cshapes, input_specs(cfg, shape))
+    return fn, args, (pshard, cshard, ishard)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    from repro.models import decode_step
+    mesh = rules.mesh
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape.name == "long_500k"
+    pshapes = param_shapes(cfg)
+    pspecs = param_partition_specs(pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    cshapes = jax.eval_shape(
+        lambda: make_caches(cfg, B, S, long_ctx=long_ctx))
+    cspecs = cache_partition_specs(cfg, cshapes, rules, B)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    ishard = input_shardings(cfg, shape, rules)
+
+    def fn(params, caches, inputs):
+        kw = {}
+        if "enc_embeds" in inputs:
+            kw["enc_tokens_embeds"] = inputs["enc_embeds"]
+        logits, caches, _ = decode_step(cfg, params, inputs["tokens"],
+                                        inputs["positions"], caches,
+                                        long_ctx=long_ctx, **kw)
+        return logits[:, 0], caches
+
+    args = (pshapes, cshapes, input_specs(cfg, shape))
+    return fn, args, (pshard, cshard, ishard)
+
+
+def build_step(cfg, shape, rules, **kw):
+    if shape.mode == "train":
+        return build_train(cfg, shape, rules, **kw)
+    if shape.mode == "prefill":
+        return build_prefill(cfg, shape, rules)
+    return build_decode(cfg, shape, rules)

@@ -1,0 +1,4 @@
+from repro.models.config import (AttnConfig, ModelConfig, MoEConfig,  # noqa
+                                 ShapeConfig, SHAPES)
+from repro.models.transformer import (decode_step, forward, init_params,  # noqa
+                                      make_caches, prefill)

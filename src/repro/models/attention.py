@@ -1,0 +1,309 @@
+"""Grouped-query attention with sliding-window / softcap variants.
+
+Two execution paths:
+  * ``chunked_attention`` — pure-jnp online-softmax attention computed in
+    (q_chunk × kv_chunk) tiles under ``jax.checkpoint``. This is the XLA path
+    used for training/prefill; it is the same algorithm as the Pallas
+    ``flash_attention`` kernel (kernels/flash_attention.py) and keeps peak
+    memory at tile size, which is what makes prefill_32k fit HBM.
+  * decode: single-query attention over a (possibly ring-buffered) KV cache.
+
+The Pallas kernels are the TPU hot path and are validated against these
+reference implementations in tests; the XLA path is used for lowering /
+cost-analysis because a Pallas custom-call is opaque to ``cost_analysis()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, split_keys
+from repro.parallel.sharding import shard_activation
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- params
+def attn_init(cfg, rng, d_model=None):
+    d = d_model or cfg.d_model
+    hd, hq, hkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    ks = split_keys(rng, 4)
+    if cfg.fused_qkv:
+        # grouped layout: per kv-group [q_0..q_{gq-1}, k, v] — one dot, and
+        # the split into q/k/v is local under group (model-axis) sharding
+        gq = hq // hkv
+        p = {
+            "wqkv": dense_init(ks[0], (d, hkv, gq + 2, hd), d, cfg.jdtype),
+            "wo": dense_init(ks[3], (hq, hd, d), hq * hd, cfg.jdtype),
+        }
+        if cfg.attn.qkv_bias:
+            p["bqkv"] = jnp.zeros((hkv, gq + 2, hd), cfg.jdtype)
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), d, cfg.jdtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), d, cfg.jdtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), d, cfg.jdtype),
+        "wo": dense_init(ks[3], (hq, hd, d), hq * hd, cfg.jdtype),
+    }
+    if cfg.attn.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), cfg.jdtype)
+        p["bk"] = jnp.zeros((hkv, hd), cfg.jdtype)
+        p["bv"] = jnp.zeros((hkv, hd), cfg.jdtype)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions):
+    if "wqkv" in p:
+        B, S = x.shape[:2]
+        hkv = cfg.n_kv_heads
+        gq = cfg.n_heads // hkv
+        qkv = jnp.einsum("bsd,dgch->bsgch", x, p["wqkv"])
+        if cfg.attn.qkv_bias:
+            qkv = qkv + p["bqkv"]
+        qkv = shard_activation(qkv, "batch", None, "model", None, None)
+        q = qkv[:, :, :, :gq].reshape(B, S, cfg.n_heads, cfg.head_dim_)
+        k = qkv[:, :, :, gq]
+        v = qkv[:, :, :, gq + 1]
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if cfg.attn.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.attn.rope_base is not None and positions is not None:
+        q = apply_rope(q, positions, cfg.attn.rope_base)
+        k = apply_rope(k, positions, cfg.attn.rope_base)
+    from repro.parallel.sharding import current_rules
+    rules = current_rules()
+    q_heads_shardable = True
+    kv_on_heads = True
+    if rules is not None:
+        msize = rules.mesh.shape[rules.model_axis]
+        q_heads_shardable = cfg.n_heads % msize == 0
+        kv_on_heads = cfg.n_kv_heads % msize == 0
+    if q_heads_shardable or q.shape[1] == 1:
+        q = shard_activation(q, "batch", None, "model", None)
+    else:
+        # heads can't shard (e.g. qwen2-0.5b's 14, whisper's 20) — shard the
+        # query *sequence* over the otherwise-idle model axis so prefill
+        # attention compute/memory split 16-ways (§Perf iteration D)
+        q = shard_activation(q, "batch", "model", None, None)
+    # kv: shard heads when divisible, else fall back to replicated — must
+    # match the cache layout (launch/specs.cache_partition_specs) so decode
+    # cache updates stay local (§Perf iteration A)
+    if kv_on_heads:
+        k = shard_activation(k, "batch", None, "model", None)
+        v = shard_activation(v, "batch", None, "model", None)
+    else:   # leave kv replicated on model; the cache layout (seq-sharded
+        k = shard_activation(k, "batch", None, None, None)   # over model)
+        v = shard_activation(v, "batch", None, None, None)   # governs
+    return q, k, v
+
+
+# --------------------------------------------------- chunked online softmax
+def _mask(q_pos, kv_pos, *, causal, window):
+    """(..., Sq, Skv) boolean validity mask from position vectors."""
+    m = kv_pos[..., None, :] >= 0
+    if causal:
+        m &= kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= kv_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def _pad_to(x, axis, mult, value=0):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax attention in tiles.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); q_pos: (B, Sq); kv_pos: (B, Skv)
+    (negative kv positions are masked out). Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    q = _pad_to(q, 1, q_chunk)
+    q_pos_p = _pad_to(q_pos, 1, q_chunk, value=-1)
+    k = _pad_to(k, 1, kv_chunk)
+    v = _pad_to(v, 1, kv_chunk)
+    kv_pos_p = _pad_to(kv_pos, 1, kv_chunk, value=-(1 << 30))
+    nq, nkv = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+
+    # (B, nq, C, Hkv, G, D)
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    qpr = q_pos_p.reshape(B, nq, q_chunk)
+    kr = k.reshape(B, nkv, kv_chunk, Hkv, D)
+    vr = v.reshape(B, nkv, kv_chunk, Hkv, D)
+    kpr = kv_pos_p.reshape(B, nkv, kv_chunk)
+
+    def q_block(qc, qp):
+        # qc: (B, C, Hkv, G, D); qp: (B, C)
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            kc, vc, kp = inputs            # (B, Ck, Hkv, D), (B, Ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32)
+            s *= scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            msk = _mask(qp, kp, causal=causal, window=window)  # (B, Cq, Ck)
+            s = jnp.where(msk[:, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+             kpr.transpose(1, 0, 2)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, C, Hkv, G, D)
+
+    q_block = jax.checkpoint(q_block)
+    out = jax.lax.map(lambda i: q_block(qr[:, i], qpr[:, i]),
+                      jnp.arange(nq))                     # (nq,B,C,Hkv,G,D)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                    softcap=None):
+    """Reference O(S^2)-memory attention (small shapes / decode / oracles)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k).astype(jnp.float32) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    msk = _mask(q_pos, kv_pos, causal=causal, window=window)
+    s = jnp.where(msk[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+# ------------------------------------------------------------------- blocks
+def attn_apply(cfg, p, x, positions, *, window=None, cache=None,
+               use_chunked=None):
+    """Self-attention over a full sequence (train/prefill).
+
+    If ``cache`` is a dict with 'k'/'v' buffers it is *written* (prefill
+    filling); returns (out, cache).
+    """
+    from repro.models import runtime_flags
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if runtime_flags.COST_MODE and S > 2048:
+        # single full-size chunk: loop trip counts of 1 (so cost_analysis
+        # counts every op exactly once) with the same program structure and
+        # sharding as the real tiled path — naive attention was tried first
+        # and polluted the collective accounting with score-tensor reshards
+        # that don't exist in the real program
+        out = chunked_attention(q, k, v, positions, positions, causal=True,
+                                window=window,
+                                softcap=cfg.attn.logit_softcap,
+                                q_chunk=S, kv_chunk=S)
+    else:
+        if use_chunked is None:
+            use_chunked = S > 2048 and not runtime_flags.COST_MODE
+        fn = chunked_attention if use_chunked else naive_attention
+        out = fn(q, k, v, positions, positions, causal=True, window=window,
+                 softcap=cfg.attn.logit_softcap)
+    if cache is not None:
+        L = cache["k"].shape[1]
+        if S >= L:  # keep the last L positions (ring semantics)
+            cache = {"k": k[:, S - L:].astype(cache["k"].dtype),
+                     "v": v[:, S - L:].astype(cache["v"].dtype),
+                     "pos": positions[:, S - L:],
+                     "len": jnp.full((B,), S, jnp.int32)}
+        else:
+            cache = {"k": cache["k"].at[:, :S].set(k.astype(cache["k"].dtype)),
+                     "v": cache["v"].at[:, :S].set(v.astype(cache["v"].dtype)),
+                     "pos": cache["pos"].at[:, :S].set(positions),
+                     "len": jnp.full((B,), S, jnp.int32)}
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(o, *residual_axes()), cache
+
+
+def attn_decode(cfg, p, x, positions, cache, *, window=None):
+    """Single-step decode. x: (B, 1, d); cache k/v: (B, L, Hkv, D) ring
+    buffer with per-row 'pos' (absolute positions, -1 = empty) and 'len'."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    L = cache["k"].shape[1]
+    slot = positions[:, 0] % L                              # (B,)
+    bidx = jnp.arange(x.shape[0])
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[bidx, slot].set(positions[:, 0])
+    out = naive_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                          positions, cpos, causal=True, window=window,
+                          softcap=cfg.attn.logit_softcap)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_cache = {"k": ck, "v": cv, "pos": cpos, "len": cache["len"] + 1}
+    return shard_activation(o, "batch", None, None), new_cache
+
+
+def cross_attn_apply(cfg, p, x, enc_kv):
+    """Cross-attention (whisper decoder). enc_kv = (k, v) precomputed from
+    encoder output: (B, T, Hkv, D) each."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.attn.qkv_bias:
+        q = q + p["bq"]
+    k, v = enc_kv
+    B, T = k.shape[0], k.shape[1]
+    q_pos = jnp.zeros(q.shape[:2], jnp.int32)
+    kv_pos = jnp.zeros((B, T), jnp.int32)
+    out = naive_attention(q, k, v, q_pos, kv_pos, causal=False)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard_activation(o, "batch", None, None)
+
+
+def cross_kv(cfg, p, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if cfg.attn.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def make_cache(cfg, batch, max_len, *, window=None, dtype=jnp.bfloat16,
+               long_ctx=False):
+    """Allocate a KV cache. Local layers only keep ``window`` slots; global
+    layers keep max_len, optionally capped (windowed-global long-ctx
+    variant)."""
+    L = max_len
+    if window is not None:
+        L = min(L, window)
+    elif long_ctx and cfg.attn.long_ctx_window_cap is not None:
+        L = min(L, cfg.attn.long_ctx_window_cap)
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }

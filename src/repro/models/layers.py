@@ -1,0 +1,131 @@
+"""Shared layers: norms, rotary embeddings, embeddings, MLPs, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_activation
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(rng, shape, in_axis_dims, dtype):
+    """Truncated-normal fan-in init (as used by most of the assigned models)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(float(in_axis_dims)))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def split_keys(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# --------------------------------------------------------------------- norms
+def norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm (gemma-style 1+scale kept simple: plain scale)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim, base):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x, positions, base):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, base)                           # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_init(cfg, rng):
+    return {"table": dense_init(rng, (cfg.padded_vocab, cfg.d_model),
+                                cfg.d_model, jnp.float32)}
+
+
+def embed_apply(cfg, p, tokens):
+    out = jnp.take(p["table"].astype(cfg.jdtype), tokens, axis=0)
+    return shard_activation(out, "batch", None, None)
+
+
+def pos_embed_init(cfg, rng, max_len):
+    return {"table": dense_init(rng, (max_len, cfg.d_model), cfg.d_model,
+                                jnp.float32)}
+
+
+def lm_head_init(cfg, rng):
+    return {"w": dense_init(rng, (cfg.d_model, cfg.padded_vocab), cfg.d_model,
+                            cfg.jdtype)}
+
+
+def lm_head_apply(cfg, params, x, embed_params=None):
+    if cfg.tie_embeddings:
+        w = embed_params["table"].astype(cfg.jdtype).T
+    else:
+        w = params["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = shard_activation(logits, "batch", None, "model")
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    else:
+        logits = logits.astype(jnp.float32)
+    # mask padded vocab entries
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.finfo(jnp.float32).min
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, neg)
+    return logits
+
+
+# ----------------------------------------------------------------------- mlp
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(cfg, rng, d_ff=None, d_in=None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    ks = split_keys(rng, 3)
+    if cfg.gated_mlp:
+        # fused gate|up layout (d, 2, F): one column-parallel dot -> one
+        # backward dx all-reduce instead of two (§Perf iteration B2); the
+        # gate/up split indexes the unsharded middle dim, so it stays local
+        return {"w_in": dense_init(ks[0], (d_in, 2, d_ff), d_in, cfg.jdtype),
+                "w_down": dense_init(ks[1], (d_ff, d_in), d_ff, cfg.jdtype)}
+    return {"w_up": dense_init(ks[0], (d_in, d_ff), d_in, cfg.jdtype),
+            "w_down": dense_init(ks[1], (d_ff, d_in), d_ff, cfg.jdtype)}
+
+
+def mlp_apply(cfg, p, x):
+    if cfg.gated_mlp:
+        gu = jnp.einsum("bsd,dcf->bscf", x, p["w_in"])
+        gu = shard_activation(gu, "batch", None, None, "model")
+        h = act_fn(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
+    else:
+        h = act_fn(cfg.act)(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    h = shard_activation(h, "batch", None, "model")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(out, *residual_axes())

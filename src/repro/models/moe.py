@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU-native design notes (hardware adaptation):
+  * dispatch is the GShard/MaxText sort-permute pattern, not a torch-style
+    per-expert loop: tokens are argsorted by expert id, placed into a dense
+    (E, C, D) buffer (C = capacity), processed with one batched einsum
+    ``ecd,edf->ecf`` that maps straight onto the MXU, and scattered back.
+  * expert weights are sharded over the ``model`` mesh axis — on the expert
+    dim when E divides the axis ('expert' mode → all-to-all dispatch), else
+    on each expert's d_ff ('tensor' mode, e.g. qwen2-moe's 60 experts on a
+    16-way axis). The mode is chosen by ``parallel.sharding.rules_for``.
+  * the router aux (load-balance) loss and router-z loss are returned so the
+    trainer can add them (Switch-Transformer style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_init, split_keys
+from repro.parallel.sharding import current_rules, shard_activation
+
+
+def moe_init(cfg, rng):
+    m = cfg.moe
+    d = cfg.d_model
+    e_ff = m.expert_d_ff or cfg.d_ff
+    s_ff = m.shared_d_ff or e_ff
+    ks = split_keys(rng, 8)
+    experts = {
+        # fused gate|up (E, D, 2, F): one expert einsum for the up path ->
+        # one backward all-reduce of the dispatch buffer (§Perf iter. B2/C)
+        "w_in": dense_init(ks[0], (m.num_experts, d, 2, e_ff), d, cfg.jdtype),
+        "w_down": dense_init(ks[2], (m.num_experts, e_ff, d), e_ff, cfg.jdtype),
+    }
+    p = {"router": dense_init(ks[3], (d, m.num_experts), d, jnp.float32),
+         "experts": experts}
+    if m.num_shared_experts:
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (d, s_ff * m.num_shared_experts), d,
+                                 cfg.jdtype),
+            "w_up": dense_init(ks[5], (d, s_ff * m.num_shared_experts), d,
+                               cfg.jdtype),
+            "w_down": dense_init(ks[6], (s_ff * m.num_shared_experts, d),
+                                 s_ff, cfg.jdtype),
+        }
+    return p
+
+
+def _expert_spec_axes():
+    rules = current_rules()
+    if rules is None:
+        return (None, None, None)
+    if rules.expert_mode == "expert":
+        return ("model", None, None)
+    return (None, None, "model")
+
+
+def moe_apply(cfg, p, x, *, capacity_factor: float = None):
+    """x: (B, S, D) -> (out, aux) with aux = dict(load_balance_loss, router_z).
+
+    Dispatch is *per batch row*: each row sorts its own S*K (token, expert)
+    copies into an (E, C_row, D) buffer. Because the row dim stays sharded
+    over the data axes, the sort/scatter is shard-local; the only cross-
+    device traffic is the expert einsum against model-axis-sharded expert
+    weights (the all-to-all of classic expert parallelism, inserted by
+    GSPMD). A single global (E, C, D) buffer would force GSPMD to
+    replicate ~N*K*cf*D activations per device — measured at 21 GB/device
+    for qwen2-moe train_4k — hence the hierarchical layout.
+    """
+    m = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    NK = S * K
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ids = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch style) ----
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(expert_ids, E).sum(2) > 0).astype(jnp.float32),
+        (0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "load_balance_loss": E * jnp.sum(frac_tokens * frac_probs),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # ---- per-row sort-based dispatch into (B, E, C, D) ----
+    C = max(int(S * K * capacity_factor / E), 4)
+    flat_e = expert_ids.reshape(B, NK)                      # (B, NK)
+    tok_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), K)[None], (B, NK))
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_tok = jnp.take_along_axis(tok_of, order, axis=1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (B, NK, E)
+    group_sizes = onehot.sum(1)                             # (B, E)
+    group_start = jnp.cumsum(group_sizes, 1) - group_sizes
+    pos_in_group = (jnp.arange(NK)[None]
+                    - jnp.take_along_axis(group_start, sorted_e, axis=1))
+    keep = pos_in_group < C
+    slot = jnp.where(keep, pos_in_group, C)                 # C = trash slot
+
+    # flat-index scatter/gather via *_along_axis: integer fancy indexing
+    # materializes (B, NK, D)-broadcast u32 index tensors that GSPMD then
+    # all-gathers (192 GiB/device on moonshot train_4k — §Perf iteration C2)
+    xg = jnp.take_along_axis(x, sorted_tok[..., None], axis=1)   # (B,NK,D)
+    flat_slot = sorted_e * (C + 1) + slot                        # (B, NK)
+
+    def _row_dispatch(xr, slots):
+        z = jnp.zeros((E * (C + 1), D), x.dtype)
+        return z.at[slots].set(xr, mode="drop")
+
+    buf = jax.vmap(_row_dispatch)(xg, flat_slot)
+    buf = buf.reshape(B, E, C + 1, D)[:, :, :C]
+    ax = _expert_spec_axes()
+    # keep the dispatch buffer REPLICATED on E: the scatter above is then
+    # shard-local (scattering into an E-sharded buffer made GSPMD fully
+    # rematerialize it — ~1 TB/device/layer of collectives on moonshot
+    # train_4k, §Perf iteration C); the expert einsum below slices the
+    # replicated buffer against E-sharded weights for free
+    buf = shard_activation(buf, "batch", None, None, None)
+
+    # ---- batched expert MLP: (B,E,C,D) x (E,D,2,F) fused gate|up ----
+    gu = jnp.einsum("becd,edxf->bexcf", buf, p["experts"]["w_in"])
+    gu = shard_activation(gu, "batch", ax[0], None, None, ax[2])
+    h = act_fn(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
+    h = shard_activation(h, "batch", ax[0], None, ax[2])
+    y = jnp.einsum("becf,efd->becd", h, p["experts"]["w_down"])
+    # one all-gather of the (small) expert outputs; the combine gather below
+    # is then shard-local
+    y = shard_activation(y, "batch", None, None, None)
+
+    # ---- combine back: weighted scatter-add into (B, S, D) ----
+    ypad = jnp.concatenate([y, jnp.zeros((B, E, 1, D), y.dtype)],
+                           axis=2).reshape(B, E * (C + 1), D)
+    gathered = jnp.take_along_axis(ypad, flat_slot[..., None], axis=1)
+    w_sorted = (jnp.take_along_axis(gate_w.reshape(B, NK), order, axis=1)
+                * keep)
+    contrib = gathered.astype(jnp.float32) * w_sorted[..., None]
+
+    def _row_combine(c, toks):
+        return jnp.zeros((S, D), jnp.float32).at[toks].add(c)
+
+    out = jax.vmap(_row_combine)(contrib, sorted_tok).astype(x.dtype)
+
+    if m.num_shared_experts:
+        sg = jnp.einsum("bsd,df->bsf", x, p["shared"]["w_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, p["shared"]["w_up"])
+        sh = act_fn(cfg.act)(sg) * su
+        sh = shard_activation(sh, "batch", None, "model")
+        # shared experts are fused along the d_ff axis of a single MLP
+        out = out + jnp.einsum("bsf,fd->bsd", sh, p["shared"]["w_down"])
+
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(out, *residual_axes()), aux

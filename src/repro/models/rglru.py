@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t) is linear in
+h, so the whole sequence is computed with ``jax.lax.associative_scan`` — the
+TPU-native parallel-scan mapping of the paper's GPU "linear scan" kernel
+(this is the hardware adaptation: log-depth scan over the sequence instead of
+a fused sequential CUDA kernel). Decode is a single fused step.
+
+Block layout (one "recurrent block" of Griffin):
+  norm -> [branch x: linear -> causal conv4 -> RG-LRU] * [branch g: linear
+  -> GeLU] -> linear out.  Gate projections are per-head block-diagonal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, split_keys
+from repro.parallel.sharding import shard_activation
+
+_C = 8.0  # Griffin's fixed gate sharpness constant
+
+
+def rglru_init(cfg, rng):
+    d = cfg.d_model
+    w = cfg.rglru_rnn_width or d
+    nh = cfg.n_heads
+    bw = w // nh
+    ks = split_keys(rng, 8)
+    return {
+        "norm": norm_init(cfg),
+        "w_x": dense_init(ks[0], (d, w), d, cfg.jdtype),
+        "w_gate": dense_init(ks[1], (d, w), d, cfg.jdtype),
+        "conv_w": dense_init(ks[2], (4, w), 4, jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        # block-diagonal (per-head) input and recurrence gates
+        "gate_x": {"w": dense_init(ks[3], (nh, bw, bw), bw, jnp.float32),
+                   "b": jnp.zeros((nh, bw), jnp.float32)},
+        "gate_a": {"w": dense_init(ks[4], (nh, bw, bw), bw, jnp.float32),
+                   "b": jnp.zeros((nh, bw), jnp.float32)},
+        # a_param init so that a ~ U(0.9, 0.999) at r=1 (Griffin init)
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), w, cfg.jdtype),
+    }
+
+
+def rglru_state(cfg, batch):
+    w = cfg.rglru_rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, 3, w), jnp.float32)}
+
+
+def _gates(p, xb):
+    """xb: (..., w) float32 -> (a, gated_input) with per-head block-diag."""
+    nh, bw = p["gate_x"]["w"].shape[0], p["gate_x"]["w"].shape[1]
+    xh = xb.reshape(*xb.shape[:-1], nh, bw)
+    rt = jax.nn.sigmoid(
+        jnp.einsum("...hk,hkv->...hv", xh, p["gate_a"]["w"]) + p["gate_a"]["b"])
+    it = jax.nn.sigmoid(
+        jnp.einsum("...hk,hkv->...hv", xh, p["gate_x"]["w"]) + p["gate_x"]["b"])
+    rt = rt.reshape(xb.shape)
+    it = it.reshape(xb.shape)
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * rt
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * (it * xb)
+
+
+def _causal_conv4(p, x, conv_state=None):
+    """Depthwise causal conv, width 4. x: (B,S,w) f32."""
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+3, w)
+    out = sum(xp[:, 3 - i: xp.shape[1] - i] * p["conv_w"][3 - i]
+              for i in range(4)) + p["conv_b"]
+    new_state = xp[:, -3:]
+    return out, new_state
+
+
+def rglru_apply(cfg, p, x, state=None):
+    """x: (B, S, d) -> (delta, state)."""
+    B, S, _ = x.shape
+    from repro.models.layers import apply_norm
+    xn = apply_norm(cfg, p["norm"], x)
+    xb = jnp.einsum("bsd,dw->bsw", xn, p["w_x"]).astype(jnp.float32)
+    xb = shard_activation(xb, "batch", None, "model")
+    gb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_gate"]))
+    gb = shard_activation(gb, "batch", None, "model")
+
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _causal_conv4(p, xb, conv_state)
+
+    a, b = _gates(p, xb)                                    # (B,S,w) each
+    if state is not None:
+        # fold carried h into the first step: h_0' contribution
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    new_state = {"h": h[:, -1], "conv": new_conv}
+
+    y = (h.astype(x.dtype)) * gb.astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(out, *residual_axes()), new_state
+
+
+def rglru_step(cfg, p, x, state):
+    """Single decode step. x: (B, 1, d)."""
+    from repro.models.layers import apply_norm
+    xn = apply_norm(cfg, p["norm"], x)
+    xb = jnp.einsum("bsd,dw->bsw", xn, p["w_x"]).astype(jnp.float32)
+    gb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_gate"]))
+    xb, new_conv = _causal_conv4(p, xb, state["conv"])
+    a, b = _gates(p, xb)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = h[:, None].astype(x.dtype) * gb.astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return (shard_activation(out, "batch", None, None),
+            {"h": h, "conv": new_conv})

@@ -1,0 +1,29 @@
+"""Global execution-mode switches.
+
+COST_MODE: used only by the dry-run's *cost-measurement* compiles. XLA's
+``cost_analysis`` counts a while-loop body once regardless of trip count, so
+inner loops (chunked attention / chunked CE / chunkwise mLSTM) would make
+FLOPs/collective counts meaningless. In cost mode every inner loop collapses
+to a single iteration (naive attention, full-width CE): the lowered module
+then has loop-free layer bodies, and the dry-run recovers full-model costs
+by depth-differencing two shallow variants (see launch/dryrun.py). Memory
+analysis always comes from the real (chunked, full-depth) compile.
+"""
+COST_MODE = False
+
+# Megatron-style sequence parallelism for the residual stream during
+# training: block outputs are annotated seq-sharded over the model axis so
+# GSPMD emits reduce-scatter (half the bytes of all-reduce + no separate
+# re-shard) — §Perf iteration B. Set by models.transformer.forward while
+# tracing a seq_shard=True step; tracing is single-threaded per call.
+SEQ_SHARD = False
+
+
+def set_cost_mode(v: bool) -> None:
+    global COST_MODE
+    COST_MODE = v
+
+
+def residual_axes():
+    """Activation axes for (B, S, D) block outputs on the residual stream."""
+    return ("batch", "model" if SEQ_SHARD else None, None)

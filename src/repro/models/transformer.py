@@ -1,0 +1,317 @@
+"""Generic stacked model: init / forward / decode over composable blocks.
+
+The layer stack is organized as ``n_periods`` repetitions of the config's
+block pattern; parameters (and caches/states) are stacked over a leading
+period axis and the stack is executed with ``jax.lax.scan`` so the lowered
+HLO contains each distinct block body exactly once — this is what keeps the
+40-pair × 512-device dry-run compilable.
+
+Supports decoder-only (causal), bidirectional encoders (causal=False — used
+by GECToR/BERT), encoder-decoder (whisper: ``enc_layers > 0``), VLM prefix
+embeddings (``prefix_embeds``), MoE, and recurrent (xLSTM / RG-LRU) blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_norm, embed_apply, embed_init,
+                                 lm_head_apply, lm_head_init, mlp_apply,
+                                 mlp_init, norm_init, pos_embed_init,
+                                 split_keys)
+from repro.parallel.sharding import shard_activation
+
+ATTN_KINDS = ("attn", "attn_local", "attn_global")
+
+
+# ------------------------------------------------------------------- init
+def _block_init(cfg: ModelConfig, kind: str, rng, *, with_cross=False):
+    ks = split_keys(rng, 6)
+    if kind in ATTN_KINDS:
+        p = {"norm1": norm_init(cfg), "attn": attn_mod.attn_init(cfg, ks[0]),
+             "norm2": norm_init(cfg)}
+        if cfg.moe is not None:
+            p["moe"] = moe_mod.moe_init(cfg, ks[1])
+        else:
+            p["mlp"] = mlp_init(cfg, ks[1])
+        if cfg.post_norms:
+            p["post_norm1"] = norm_init(cfg)
+            p["post_norm2"] = norm_init(cfg)
+        if with_cross:
+            p["norm_cross"] = norm_init(cfg)
+            p["cross_attn"] = attn_mod.attn_init(cfg, ks[2])
+        return p
+    if kind == "mlstm":
+        return {"mlstm": xlstm_mod.mlstm_init(cfg, ks[0])}
+    if kind == "slstm":
+        return {"slstm": xlstm_mod.slstm_init(cfg, ks[0])}
+    if kind == "rglru":
+        return {"rglru": rglru_mod.rglru_init(cfg, ks[0]),
+                "norm2": norm_init(cfg), "mlp": mlp_init(cfg, ks[1])}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, rng):
+    ks = split_keys(rng, 8 + len(cfg.pattern))
+    params = {"embed": embed_init(cfg, ks[0]),
+              "final_norm": norm_init(cfg)}
+    if cfg.abs_pos:
+        params["pos_embed"] = pos_embed_init(cfg, ks[1],
+                                             min(cfg.max_seq_len, 8192))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_init(cfg, ks[2])
+
+    with_cross = cfg.enc_layers > 0
+    blocks = {}
+    for j, kind in enumerate(cfg.pattern):
+        per = []
+        subkeys = split_keys(ks[3 + j], cfg.n_periods)
+        for i in range(cfg.n_periods):
+            per.append(_block_init(cfg, kind, subkeys[i],
+                                   with_cross=with_cross))
+        blocks[f"blk{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    params["blocks"] = blocks
+
+    if cfg.enc_layers > 0:
+        enc = []
+        subkeys = split_keys(ks[7], cfg.enc_layers)
+        for i in range(cfg.enc_layers):
+            enc.append(_block_init(cfg, "attn", subkeys[i]))
+        params["enc_blocks"] = {"blk0": jax.tree.map(
+            lambda *xs: jnp.stack(xs), *enc)}
+        params["enc_final_norm"] = norm_init(cfg)
+    return params
+
+
+# ------------------------------------------------------------------ caches
+def make_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                long_ctx: bool = False, dtype=jnp.bfloat16):
+    """Stacked (over periods) decode caches/states per pattern position.
+
+    Encoder-decoder models additionally carry a cross-attention KV cache
+    ('ck'/'cv', filled once at prefill) so decode never re-runs the encoder.
+    """
+    caches = {}
+    for j, kind in enumerate(cfg.pattern):
+        if kind in ATTN_KINDS:
+            window = cfg.attn.window if kind == "attn_local" else None
+            one = attn_mod.make_cache(cfg, batch, max_len, window=window,
+                                      dtype=dtype, long_ctx=long_ctx)
+            if cfg.enc_layers > 0:
+                hd = cfg.head_dim_
+                one["ck"] = jnp.zeros((batch, cfg.enc_seq_len,
+                                       cfg.n_kv_heads, hd), dtype)
+                one["cv"] = jnp.zeros((batch, cfg.enc_seq_len,
+                                       cfg.n_kv_heads, hd), dtype)
+        elif kind == "mlstm":
+            one = xlstm_mod.mlstm_state(cfg, batch)
+        elif kind == "slstm":
+            one = xlstm_mod.slstm_state(cfg, batch)
+        elif kind == "rglru":
+            one = rglru_mod.rglru_state(cfg, batch)
+        caches[f"blk{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), one)
+    return caches
+
+
+# ----------------------------------------------------------------- blocks
+def _apply_block(cfg, kind, p, x, positions, cache, *, mode, causal,
+                 long_ctx, enc_out):
+    """Returns (x, new_cache, aux_losses)."""
+    aux = jnp.zeros((2,), jnp.float32)  # (load_balance, router_z)
+    if kind in ATTN_KINDS:
+        window = cfg.attn.window if kind == "attn_local" else None
+        if window is None and long_ctx and cfg.attn.long_ctx_window_cap:
+            window = cfg.attn.long_ctx_window_cap
+        # split the cross-attention KV cache (enc-dec) from the self cache
+        cross_cache = None
+        if cache is not None and "ck" in cache:
+            cross_cache = (cache["ck"], cache["cv"])
+            cache = {k: v for k, v in cache.items() if k not in ("ck", "cv")}
+        h = apply_norm(cfg, p["norm1"], x)
+        if mode == "decode":
+            a, cache = attn_mod.attn_decode(cfg, p["attn"], h, positions,
+                                            cache, window=window)
+        else:
+            if not causal:
+                q, k, v = attn_mod._project_qkv(cfg, p["attn"], h, positions)
+                a = attn_mod.naive_attention(q, k, v, positions, positions,
+                                             causal=False, window=None,
+                                             softcap=cfg.attn.logit_softcap)
+                a = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+            else:
+                a, cache = attn_mod.attn_apply(cfg, p["attn"], h, positions,
+                                               window=window, cache=cache)
+        if cfg.post_norms:
+            a = apply_norm(cfg, p["post_norm1"], a)
+        x = x + a
+        if "cross_attn" in p and (enc_out is not None
+                                  or cross_cache is not None):
+            hc = apply_norm(cfg, p["norm_cross"], x)
+            if enc_out is not None:   # prefill/train: fresh cross KV
+                kv = attn_mod.cross_kv(cfg, p["cross_attn"], enc_out)
+                if cross_cache is not None:   # fill the cross cache once
+                    cross_cache = (kv[0].astype(cross_cache[0].dtype),
+                                   kv[1].astype(cross_cache[1].dtype))
+            else:                     # decode: cached cross KV, no encoder
+                kv = (cross_cache[0].astype(x.dtype),
+                      cross_cache[1].astype(x.dtype))
+            x = x + attn_mod.cross_attn_apply(cfg, p["cross_attn"], hc, kv)
+        if cache is not None and cross_cache is not None:
+            cache = dict(cache, ck=cross_cache[0], cv=cross_cache[1])
+        h = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe is not None:
+            f, moe_aux = moe_mod.moe_apply(cfg, p["moe"], h)
+            aux = aux + jnp.stack([moe_aux["load_balance_loss"],
+                                   moe_aux["router_z"]])
+        else:
+            f = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norms:
+            f = apply_norm(cfg, p["post_norm2"], f)
+        x = x + f
+    elif kind == "mlstm":
+        delta, cache = xlstm_mod.mlstm_apply(cfg, p["mlstm"], x, state=cache)
+        x = x + delta
+    elif kind == "slstm":
+        delta, cache = xlstm_mod.slstm_apply(cfg, p["slstm"], x, state=cache)
+        x = x + delta
+    elif kind == "rglru":
+        if mode == "decode":
+            delta, cache = rglru_mod.rglru_step(cfg, p["rglru"], x, cache)
+        else:
+            delta, cache = rglru_mod.rglru_apply(cfg, p["rglru"], x,
+                                                 state=cache)
+        x = x + delta
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------- forward
+def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
+            prefix_embeds=None, positions=None, caches=None,
+            mode: str = "full", causal: bool = True, long_ctx: bool = False,
+            enc_tokens_embeds=None, remat: bool = False,
+            return_hidden: bool = False, seq_shard: bool = False):
+    """Run the model.
+
+    mode: 'full' (train/prefill) or 'decode' (single step with caches).
+    Returns (logits_or_hidden, new_caches, aux) where aux = (lb_loss, z_loss).
+    """
+    # ---- encoder (whisper) ----
+    enc_out = None
+    if cfg.enc_layers > 0 and enc_tokens_embeds is not None:
+        eo = enc_tokens_embeds.astype(cfg.jdtype)
+        eo = shard_activation(eo, "batch", None, None)
+        epos = jnp.broadcast_to(jnp.arange(eo.shape[1], dtype=jnp.int32),
+                                eo.shape[:2])
+
+        def enc_body(x, p):
+            x, _, _ = _apply_block(cfg, "attn", p, x, epos, None,
+                                   mode="full", causal=False, long_ctx=False,
+                                   enc_out=None)
+            return x, None
+        from repro.models import runtime_flags
+        if runtime_flags.COST_MODE:       # unrolled so cost_analysis counts
+            for i in range(cfg.enc_layers):
+                eo, _ = enc_body(eo, jax.tree.map(
+                    lambda x: x[i], params["enc_blocks"]["blk0"]))
+        else:
+            eo, _ = jax.lax.scan(enc_body, eo, params["enc_blocks"]["blk0"])
+        enc_out = apply_norm(cfg, params["enc_final_norm"], eo)
+
+    # ---- input embedding ----
+    if embeds is not None:
+        x = embeds.astype(cfg.jdtype)
+    else:
+        x = embed_apply(cfg, params["embed"], tokens)
+        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrent"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.jdtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.abs_pos and "pos_embed" in params:
+        tbl = params["pos_embed"]["table"].astype(cfg.jdtype)
+        x = x + tbl[positions % tbl.shape[0]]
+    x = shard_activation(x, "batch", "model" if seq_shard else None, None)
+
+    # ---- block stack: python loop over pattern positions, scan over periods
+    new_caches = {} if caches is not None else None
+    aux_total = jnp.zeros((2,), jnp.float32)
+
+    def run_stack(x):
+        nonlocal new_caches, aux_total
+        for j, kind in enumerate(cfg.pattern):
+            bp = params["blocks"][f"blk{j}"]
+            bc = caches[f"blk{j}"] if caches is not None else None
+
+            def body(carry, xs):
+                xx, aux = carry
+                if bc is not None:
+                    p, c = xs
+                else:
+                    p, c = xs, None
+                xx, c_new, a = _apply_block(
+                    cfg, kind, p, xx, positions, c, mode=mode, causal=causal,
+                    long_ctx=long_ctx, enc_out=enc_out)
+                if seq_shard:
+                    xx = shard_activation(xx, "batch", "model", None)
+                return (xx, aux + a), c_new
+
+            body_fn = jax.checkpoint(body) if remat else body
+            xs = (bp, bc) if bc is not None else bp
+            from repro.models import runtime_flags
+            if runtime_flags.COST_MODE:   # unrolled: cost_analysis counts
+                cs_list = []              # while-loop bodies only once
+                carry = (x, aux_total)
+                for i in range(cfg.n_periods):
+                    xi = jax.tree.map(lambda t: t[i], xs)
+                    carry, c_new = body_fn(carry, xi)
+                    cs_list.append(c_new)
+                (x, aux_total) = carry
+                cs = (jax.tree.map(lambda *ts: jnp.stack(ts), *cs_list)
+                      if cs_list and cs_list[0] is not None else None)
+            else:
+                (x, aux_total), cs = jax.lax.scan(
+                    body_fn, (x, aux_total), xs)
+            if new_caches is not None:
+                new_caches[f"blk{j}"] = cs
+        return x
+
+    # NOTE: annotating block *outputs* seq-sharded (runtime_flags.SEQ_SHARD)
+    # was tried and refuted — it added resharding instead of emitting
+    # reduce-scatters (§Perf gemma2 iteration B: collective +11%). The
+    # carry-level seq-shard annotation below is what holds the memory win.
+    x = run_stack(x)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, new_caches, aux_total
+    logits = lm_head_apply(cfg, params.get("lm_head"), x,
+                           embed_params=params["embed"])
+    return logits, new_caches, aux_total
+
+
+# ------------------------------------------------------------ entry points
+def prefill(cfg, params, tokens, caches, **kw):
+    return forward(cfg, params, tokens=tokens, caches=caches, mode="full",
+                   **kw)
+
+
+def decode_step(cfg, params, tokens, positions, caches, *, long_ctx=False,
+                enc_tokens_embeds=None):
+    """tokens: (B, 1) next-token ids; positions: (B, 1) absolute positions."""
+    return forward(cfg, params, tokens=tokens, positions=positions,
+                   caches=caches, mode="decode", long_ctx=long_ctx,
+                   enc_tokens_embeds=enc_tokens_embeds)

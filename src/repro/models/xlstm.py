@@ -1,0 +1,292 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, exp gating) and
+sLSTM (scalar memory, exp gating with stabilizer state).
+
+Both are implemented in their recurrent form via ``jax.lax.scan`` over time
+(the HLO contains the loop body once, so deep/long configs lower cheaply) and
+expose single-step functions for serving. State, not KV cache, is the decode
+artifact — this is what makes xlstm-125m admissible at long_500k.
+
+Simplifications vs the reference implementation (recorded in DESIGN.md):
+the pre-QKV causal conv4 of the mLSTM block is omitted; GroupNorm after the
+cell is RMSNorm over the concatenated heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, dense_init, norm_init, split_keys
+from repro.parallel.sharding import shard_activation
+
+
+# ===================================================================== mLSTM
+def mlstm_init(cfg, rng):
+    d = cfg.d_model
+    dp = int(d * cfg.xlstm_proj_factor)
+    nh = cfg.n_heads
+    hd = dp // nh
+    ks = split_keys(rng, 8)
+    return {
+        "norm": norm_init(cfg),
+        "w_in": dense_init(ks[0], (d, 2 * dp), d, cfg.jdtype),
+        "wq": dense_init(ks[1], (dp, nh, hd), dp, cfg.jdtype),
+        "wk": dense_init(ks[2], (dp, nh, hd), dp, cfg.jdtype),
+        "wv": dense_init(ks[3], (dp, nh, hd), dp, cfg.jdtype),
+        "w_igate": dense_init(ks[4], (dp, nh), dp, jnp.float32),
+        "w_fgate": dense_init(ks[5], (dp, nh), dp, jnp.float32),
+        "b_igate": jnp.zeros((nh,), jnp.float32),
+        "b_fgate": jnp.full((nh,), 3.0, jnp.float32),  # forget-open init
+        "cell_norm": norm_init(cfg, dp),
+        "w_out": dense_init(ks[6], (dp, d), dp, cfg.jdtype),
+    }
+
+
+def mlstm_state(cfg, batch):
+    dp = int(cfg.d_model * cfg.xlstm_proj_factor)
+    nh = cfg.n_heads
+    hd = dp // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        # -inf stabilizer start: the first step then has i-weight 1 and no
+        # history decay, which is exactly the parallel form's convention
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_cell(q, k, v, it, ft, state):
+    """One step. q/k/v: (B, nh, hd); it/ft: (B, nh) raw gate pre-acts."""
+    hd = q.shape[-1]
+    m_new = jnp.maximum(ft + state["m"], it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + state["m"] - m_new)
+    kf = k.astype(jnp.float32) / jnp.sqrt(float(hd))
+    C = (f[..., None, None] * state["C"]
+         + i[..., None, None] * (v.astype(jnp.float32)[..., :, None]
+                                 * kf[..., None, :]))
+    n = f[..., None] * state["n"] + i[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def _mlstm_parallel(q, k, v, it, ft, *, q_chunk=256, kv_chunk=256):
+    """Chunkwise-parallel mLSTM — the TPU adaptation of the matrix-memory
+    recurrence (DESIGN.md §hardware-adaptation).
+
+    Unrolling the stabilized recurrence gives exactly decay-masked attention:
+        m_t   = max_{j<=t} (F_t - F_j + i_j)        (max-plus assoc. scan)
+        s_tj  = (q_t . k_j / sqrt(d)) * exp(F_t - F_j + i_j - m_t),  j <= t
+        h_t   = sum_j s_tj v_j / max(|sum_j s_tj|, 1)
+    with F = cumsum(log f). All exponents are <= 0 by construction of m, so
+    the tiled evaluation is numerically stable. Training/prefill runs this
+    parallel form (the sequential scan would put the (B,H,D,D) matrix state
+    into AD residuals at every step — terabytes at 4k); decode keeps the
+    recurrent cell.
+
+    q/k/v: (B, S, H, D); it/ft: (B, S, H) (ft already log-sigmoid).
+    Returns (B, S, H, D) float32, and the final (C, n, m) state.
+    """
+    B, S, H, D = q.shape
+    kf = k.astype(jnp.float32) / jnp.sqrt(float(D))
+    F = jnp.cumsum(ft, axis=1)                               # (B, S, H)
+
+    def mx(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+    _, m = jax.lax.associative_scan(mx, (ft, it), axis=1)    # (B, S, H)
+
+    q = _pad_seq(q, q_chunk)
+    Fq = _pad_seq(F, q_chunk)
+    mq = _pad_seq(m, q_chunk)
+    kfp = _pad_seq(kf, kv_chunk)
+    vp = _pad_seq(v, kv_chunk)
+    Fk = _pad_seq(F, kv_chunk)
+    ik = _pad_seq(it, kv_chunk, value=-1e30)
+    nq, nk = q.shape[1] // q_chunk, kfp.shape[1] // kv_chunk
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        Fc = jax.lax.dynamic_slice_in_dim(Fq, qi * q_chunk, q_chunk, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mq, qi * q_chunk, q_chunk, 1)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            num, den = carry
+            kc = jax.lax.dynamic_slice_in_dim(kfp, ki * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, ki * kv_chunk, kv_chunk, 1)
+            Fj = jax.lax.dynamic_slice_in_dim(Fk, ki * kv_chunk, kv_chunk, 1)
+            ij = jax.lax.dynamic_slice_in_dim(ik, ki * kv_chunk, kv_chunk, 1)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32), kc)
+            expo = (Fc.transpose(0, 2, 1)[:, :, :, None]
+                    - Fj.transpose(0, 2, 1)[:, :, None, :]
+                    + ij.transpose(0, 2, 1)[:, :, None, :]
+                    - mc.transpose(0, 2, 1)[:, :, :, None])
+            causal = kpos[None, :] <= qpos[:, None]
+            w = jnp.where(causal[None, None],
+                          jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+            sw = s * w
+            num = num + jnp.einsum("bhqk,bkhd->bhqd", sw,
+                                   vc.astype(jnp.float32))
+            den = den + jnp.sum(sw, axis=-1)
+            return (num, den), None
+
+        num0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+        den0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (num, den), _ = jax.lax.scan(kv_step, (num0, den0), jnp.arange(nk))
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        return h.transpose(0, 2, 1, 3)                       # (B, C, H, D)
+
+    q_block = jax.checkpoint(q_block)
+    hs = jax.lax.map(q_block, jnp.arange(nq))                # (nq,B,C,H,D)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, D)[:, :S]
+
+    # final state for decode continuation (exact recurrent state at t=S)
+    m_last = m[:, -1]                                        # (B, H)
+    decay = jnp.exp(jnp.minimum(F[:, -1][:, :, None] - F.transpose(0, 2, 1)
+                                + it.transpose(0, 2, 1)
+                                - m_last[:, :, None], 0.0))  # (B,H,S)
+    C = jnp.einsum("bhs,bshv,bshk->bhvk", decay, v.astype(jnp.float32), kf)
+    n = jnp.einsum("bhs,bshk->bhk", decay, kf)
+    state = {"C": C, "n": n, "m": m_last}
+    return hs, state
+
+
+def _pad_seq(x, mult, value=0.0):
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def mlstm_apply(cfg, p, x, state=None):
+    """x: (B, S, d). Returns (out, final_state)."""
+    B, S, d = x.shape
+    xn = apply_norm(cfg, p["norm"], x)
+    proj = jnp.einsum("bsd,de->bse", xn, p["w_in"])
+    proj = shard_activation(proj, "batch", None, "model")
+    main, gate = jnp.split(proj, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", main, p["wq"])
+    k = jnp.einsum("bse,ehk->bshk", main, p["wk"])
+    v = jnp.einsum("bse,ehk->bshk", main, p["wv"])
+    it = jnp.einsum("bse,eh->bsh", main.astype(jnp.float32), p["w_igate"]) \
+        + p["b_igate"]
+    ft = jnp.einsum("bse,eh->bsh", main.astype(jnp.float32), p["w_fgate"]) \
+        + p["b_fgate"]
+    ft = jax.nn.log_sigmoid(ft)
+
+    if state is None and S > 1:
+        # chunkwise-parallel form (training / from-scratch prefill)
+        from repro.models import runtime_flags
+        if runtime_flags.COST_MODE:      # loop-free for cost_analysis
+            hs, state = _mlstm_parallel(q, k, v, it, ft,
+                                        q_chunk=S, kv_chunk=S)
+        else:
+            hs, state = _mlstm_parallel(q, k, v, it, ft)
+        hs = hs.reshape(B, S, -1)
+    else:
+        if state is None:
+            state = mlstm_state(cfg, B)
+
+        def step(st, inp):
+            qt, kt, vt, i_t, f_t = inp
+            h, st = _mlstm_cell(qt, kt, vt, i_t, f_t, st)
+            return st, h
+
+        state, hs = jax.lax.scan(
+            step, state,
+            (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+             v.transpose(1, 0, 2, 3), it.transpose(1, 0, 2),
+             ft.transpose(1, 0, 2)))
+        hs = hs.transpose(1, 0, 2, 3).reshape(B, S, -1)      # (B,S,dp)
+    hs = apply_norm(cfg, p["cell_norm"], hs.astype(x.dtype))
+    hs = hs * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", hs, p["w_out"])
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(out, *residual_axes()), state
+
+
+# ===================================================================== sLSTM
+def slstm_init(cfg, rng):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = split_keys(rng, 12)
+    p = {"norm": norm_init(cfg)}
+    for g, kw, kr in zip("izfo", ks[0:4], ks[4:8]):
+        p[f"w_{g}"] = dense_init(kw, (d, nh, hd), d, cfg.jdtype)
+        p[f"r_{g}"] = dense_init(kr, (nh, hd, hd), hd, cfg.jdtype)
+        p[f"b_{g}"] = jnp.zeros((nh, hd), jnp.float32)
+    p["cell_norm"] = norm_init(cfg)
+    ff = int(d * 4 / 3)
+    p["ffn"] = {
+        "norm": norm_init(cfg),
+        "w_gate": dense_init(ks[8], (d, ff), d, cfg.jdtype),
+        "w_up": dense_init(ks[9], (d, ff), d, cfg.jdtype),
+        "w_down": dense_init(ks[10], (ff, d), ff, cfg.jdtype),
+    }
+    return p
+
+
+def slstm_state(cfg, batch):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, nh, hd),
+                                                   jnp.float32)}
+
+
+def _slstm_cell(p, wx, state):
+    """wx: dict gate -> (B, nh, hd) input contributions."""
+    h_prev = state["h"]
+    pre = {g: wx[g]
+           + jnp.einsum("bhk,hkv->bhv", h_prev, p[f"r_{g}"].astype(jnp.float32))
+           + p[f"b_{g}"] for g in "izfo"}
+    zt = jnp.tanh(pre["z"])
+    ot = jax.nn.sigmoid(pre["o"])
+    logf = jax.nn.log_sigmoid(pre["f"])
+    m_new = jnp.maximum(logf + state["m"], pre["i"])
+    i = jnp.exp(pre["i"] - m_new)
+    f = jnp.exp(logf + state["m"] - m_new)
+    c = f * state["c"] + i * zt
+    n = f * state["n"] + i
+    h = ot * c / jnp.maximum(n, 1.0)
+    return h, {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(cfg, p, x, state=None):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    xn = apply_norm(cfg, p["norm"], x).astype(jnp.float32)
+    wx = {g: jnp.einsum("bsd,dhk->bshk", xn, p[f"w_{g}"].astype(jnp.float32))
+          for g in "izfo"}
+    if state is None:
+        state = slstm_state(cfg, B)
+
+    def step(st, inp):
+        h, st = _slstm_cell(p, dict(zip("izfo", inp)), st)
+        return st, h
+
+    state, hs = jax.lax.scan(
+        step, state, tuple(wx[g].transpose(1, 0, 2, 3) for g in "izfo"))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    out = apply_norm(cfg, p["cell_norm"], hs)
+    # post-FFN sub-block (proj factor 4/3, gated)
+    y = x + out
+    yn = apply_norm(cfg, p["ffn"]["norm"], y)
+    g = jnp.einsum("bsd,df->bsf", yn, p["ffn"]["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", yn, p["ffn"]["w_up"])
+    hmid = jax.nn.gelu(g) * u
+    hmid = shard_activation(hmid, "batch", None, "model")
+    ffn_out = jnp.einsum("bsf,fd->bsd", hmid, p["ffn"]["w_down"])
+    # returns the *delta* to add to the residual stream: out + ffn path
+    total = out + ffn_out
+    from repro.models.runtime_flags import residual_axes
+    return shard_activation(total, *residual_axes()), state

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    MeshRules,
+    current_rules,
+    param_partition_specs,
+    set_rules,
+    shard_activation,
+    use_rules,
+)

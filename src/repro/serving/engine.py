@@ -1,0 +1,203 @@
+"""MLaaS serving engine — the JAX-native stand-in for the paper's
+Nginx + Flask + GECToR stack (Fig. 6).
+
+Two modes, matching the two model kinds in the repo:
+  * 'encoder' — one bidirectional forward per request batch (GECToR: the
+    paper's workload). Requests are token sequences; responses are the
+    model's per-token outputs (edit tags for GECToR).
+  * 'decoder' — prefill + autoregressive decode with a KV-cache pool
+    (continuous batching at step granularity).
+
+A background worker thread drains a request queue and forms batches (up to
+``max_batch``, waiting at most ``batch_window_ms`` — the dynamic-batching
+knob the paper's per-request Flask threading lacks). An optional
+``AdmissionQueue`` bounds in-flight work (the paper's proposed §4
+mitigation). Per-request wall latency and batch stats are recorded so the
+load-test client can tabulate the paper's metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, forward, make_caches
+from repro.serving.scheduler import AdmissionQueue
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "encoder"             # 'encoder' | 'decoder'
+    max_batch: int = 32
+    batch_window_ms: float = 2.0
+    pad_buckets: tuple = (32, 64, 128, 256, 512)
+    max_inflight: Optional[int] = None   # admission control; None = off
+    max_new_tokens: int = 16             # decoder mode
+
+
+@dataclasses.dataclass
+class _Request:
+    tokens: np.ndarray
+    future: Future
+    t_submit: float
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, engine_cfg: EngineConfig,
+                 head_fn: Optional[Callable] = None):
+        """head_fn(hidden (B,S,d)) -> per-request payload; defaults to
+        hidden states (encoder) / sampled tokens (decoder)."""
+        self.cfg = cfg
+        self.params = params
+        self.ec = engine_cfg
+        self.head_fn = head_fn
+        self._q: "queue.Queue[_Request]" = queue.Queue()
+        self._admission = (AdmissionQueue(engine_cfg.max_inflight)
+                           if engine_cfg.max_inflight else None)
+        self.latencies: List[float] = []
+        self.batch_sizes: List[int] = []
+        self._stop = threading.Event()
+        self._compiled = {}
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------- client
+    def submit(self, tokens: np.ndarray) -> Future:
+        fut: Future = Future()
+        req = _Request(np.asarray(tokens, np.int32), fut, time.perf_counter())
+        if self._admission is not None:
+            def admit():
+                with self._admission:
+                    self._q.put(req)
+                    req.future.result()  # hold the slot until served
+            threading.Thread(target=admit, daemon=True).start()
+        else:
+            self._q.put(req)
+        return fut
+
+    def close(self):
+        self._stop.set()
+        self._worker.join(timeout=5)
+
+    # ------------------------------------------------------------- server
+    def _bucket(self, n: int) -> int:
+        for b in self.ec.pad_buckets:
+            if n <= b:
+                return b
+        return self.ec.pad_buckets[-1]
+
+    def _encoder_fn(self, bucket: int):
+        if ("enc", bucket) not in self._compiled:
+            def fn(params, tokens, mask):
+                pos = jnp.broadcast_to(
+                    jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                    tokens.shape)
+                # GECToR-style param trees nest the encoder under 'encoder'
+                enc_params = params.get("encoder", params)
+                hid, _, _ = forward(self.cfg, enc_params, tokens=tokens,
+                                    positions=pos, causal=False,
+                                    return_hidden=True)
+                if self.head_fn is not None:
+                    return self.head_fn(params, hid, mask)
+                return hid
+            self._compiled[("enc", bucket)] = jax.jit(fn)
+        return self._compiled[("enc", bucket)]
+
+    def _decode_fns(self):
+        if "dec" not in self._compiled:
+            self._compiled["dec"] = (
+                jax.jit(lambda p, t, c: forward(self.cfg, p, tokens=t,
+                                                caches=c, mode="full")),
+                jax.jit(lambda p, t, pos, c: decode_step(self.cfg, p, t, pos,
+                                                         c)),
+            )
+        return self._compiled["dec"]
+
+    def _serve_batch(self, reqs: List[_Request]):
+        lens = [len(r.tokens) for r in reqs]
+        bucket = self._bucket(max(lens))
+        B = len(reqs)
+        toks = np.zeros((B, bucket), np.int32)
+        mask = np.zeros((B, bucket), bool)
+        for i, r in enumerate(reqs):
+            L = min(len(r.tokens), bucket)
+            toks[i, :L] = r.tokens[:L]
+            mask[i, :L] = True
+
+        if self.ec.mode == "encoder":
+            out = self._encoder_fn(bucket)(self.params, jnp.asarray(toks),
+                                           jnp.asarray(mask))
+            out = jax.device_get(out)
+            for i, r in enumerate(reqs):
+                r.future.set_result(jax.tree.map(lambda x: x[i], out))
+        else:
+            prefill_fn, step_fn = self._decode_fns()
+            caches = make_caches(self.cfg, B, bucket + self.ec.max_new_tokens,
+                                 dtype=jnp.float32)
+            logits, caches, _ = prefill_fn(self.params, jnp.asarray(toks),
+                                           caches)
+            # first generated token: per-row logits at the row's real last
+            # position (padded rows must not sample from garbage columns)
+            lens_a = jnp.asarray(np.array(lens, np.int32))
+            last = jnp.take_along_axis(
+                logits, (lens_a - 1)[:, None, None], axis=1)
+            tok = jnp.argmax(last[:, 0], axis=-1)[:, None].astype(jnp.int32)
+            outs = [np.asarray(tok)]
+            pos = lens_a[:, None] - 1
+            for _ in range(self.ec.max_new_tokens - 1):
+                pos = pos + 1
+                logits, caches, _ = step_fn(self.params, tok, pos, caches)
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                outs.append(np.asarray(tok))
+            gen = np.concatenate(outs, axis=1)
+            for i, r in enumerate(reqs):
+                r.future.set_result(gen[i])
+
+        now = time.perf_counter()
+        self.batch_sizes.append(B)
+        for r in reqs:
+            self.latencies.append(now - r.t_submit)
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.ec.batch_window_ms / 1e3
+            while len(batch) < self.ec.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            try:
+                self._serve_batch(batch)
+            except Exception as e:  # pragma: no cover - surfaced to client
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self) -> dict:
+        lat = np.array(self.latencies) if self.latencies else np.zeros(1)
+        m = {"requests": len(self.latencies),
+             "latency_mean_s": float(lat.mean()),
+             "latency_p50_s": float(np.percentile(lat, 50)),
+             "latency_p95_s": float(np.percentile(lat, 95)),
+             "batch_size_mean": float(np.mean(self.batch_sizes))
+             if self.batch_sizes else 0.0}
+        if self._admission is not None:
+            m["admission_peak_queue"] = self._admission.stats.queued_peak
+            m["admission_wait_total_s"] = self._admission.stats.wait_total_s
+        return m

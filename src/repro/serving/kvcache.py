@@ -1,0 +1,49 @@
+"""KV-cache pool with request-slot management for continuous batching.
+
+The cache pytree itself is built by ``models.make_caches`` (per-pattern
+stacked ring buffers / recurrent states); this module adds the pool view the
+engine uses: a fixed batch of slots, per-slot request ids and lengths, and
+reset-on-assign semantics so a finished request's slot is immediately
+reusable without reallocating device buffers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import make_caches
+
+
+class CachePool:
+    def __init__(self, cfg, n_slots: int, max_len: int, *, long_ctx=False,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = make_caches(cfg, n_slots, max_len, long_ctx=long_ctx,
+                                  dtype=dtype)
+        # single-slot template preserving per-leaf "empty" values (e.g. the
+        # attention cache's pos = -1 sentinel)
+        self._template = make_caches(cfg, 1, max_len, long_ctx=long_ctx,
+                                     dtype=dtype)
+        self.request_of = [None] * n_slots       # slot -> request id
+        self.lengths = [0] * n_slots
+
+    def assign(self, request_id) -> int:
+        slot = self.request_of.index(None)
+        self.request_of[slot] = request_id
+        self.lengths[slot] = 0
+        self.caches = jax.tree.map(
+            lambda x, t: x.at[:, slot].set(t[:, 0]), self.caches,
+            self._template)
+        return slot
+
+    def release(self, slot: int) -> None:
+        self.request_of[slot] = None
+        self.lengths[slot] = 0
+
+    @property
+    def free_slots(self) -> int:
+        return self.request_of.count(None)

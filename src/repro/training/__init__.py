@@ -1,0 +1,4 @@
+from repro.training.optimizer import (adamw_init, adamw_update,  # noqa: F401
+                                      OptConfig)
+from repro.training.train_loop import (loss_fn, make_train_step,  # noqa: F401
+                                       train_step)

@@ -1,0 +1,66 @@
+"""Pytree checkpointing via msgpack (installed in this environment).
+
+Layout: a single ``<step>.ckpt`` file holding {flat_key: (dtype, shape,
+bytes)} plus a small JSON-ish manifest. Restores onto host then device_put —
+fine for the example-scale models; a real multi-pod run would swap this for
+per-shard async writes behind the same save/restore interface.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save(path: str, tree: Any) -> None:
+    flat = _flatten(jax.device_get(tree))
+    payload = {k: {"d": str(np.asarray(v).dtype),
+                   "s": list(np.asarray(v).shape),
+                   "b": np.ascontiguousarray(
+                       np.asarray(v).view(np.uint8)
+                       if np.asarray(v).dtype == jnp.bfloat16
+                       else np.asarray(v)).tobytes()}
+               for k, v in flat.items()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    flat = {}
+    for k, rec in payload.items():
+        dt, shape = rec["d"], tuple(rec["s"])
+        if dt == "bfloat16":
+            arr = np.frombuffer(rec["b"], np.uint8).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(rec["b"], np.dtype(dt))
+        flat[k] = jnp.asarray(arr.reshape(shape))
+    return _unflatten(flat)

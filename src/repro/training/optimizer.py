@@ -1,0 +1,96 @@
+"""AdamW with optional ZeRO-1 moment sharding (no external deps).
+
+Moments are fp32 regardless of param dtype. Under ZeRO-1 the moment pytree is
+annotated to shard its largest replicated axis over the ``data`` mesh axis —
+the optimizer math is elementwise, so GSPMD keeps the update local and only
+the params see cross-axis traffic (this is the beyond-paper memory
+optimization recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(oc: OptConfig, step):
+    warm = jnp.minimum(step / max(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(oc: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / (gn + 1e-9))
+    lr = lr_schedule(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + oc.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gn
+
+
+def zero1_spec(spec: P, shape, rules) -> P:
+    """Shard the first replicated-and-divisible axis of a moment tensor over
+    the data axis (ZeRO-1)."""
+    if not rules.zero1:
+        return spec
+    dsize = rules.axis_size("data")
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = "data"
+            return P(*entries)
+    return P(*entries)
+
+
+def opt_state_specs(param_specs, params, rules):
+    mom = jax.tree.map(
+        lambda s, p: zero1_spec(s, p.shape, rules), param_specs, params,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"mu": mom, "nu": mom, "step": P()}

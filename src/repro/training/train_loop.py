@@ -1,0 +1,124 @@
+"""Training step: next-token cross-entropy (+ MoE aux losses) + AdamW."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def _ce_from_logits(logits, labels, valid):
+    labels_c = jnp.where(valid, labels, 0)
+    # lse-based CE: never materializes a (B,S,V) log_softmax copy — the
+    # fp32 convert fuses into the reduction (matters at vocab 256k)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - lab) * valid), jnp.sum(valid)
+
+
+def chunked_ce(cfg, params, hidden, labels, valid, *, seq_chunk=512):
+    """Cross-entropy computed per sequence chunk under jax.checkpoint.
+
+    The naive path keeps several fp32 (B, S, V) buffers alive at once
+    (logits + softcap/mask copies + their cotangents) — measured 4.2 GiB
+    *each* per device for gemma2-27b train_4k (V=256k). Chunking bounds live
+    logits to (B, seq_chunk, V) and remat recomputes them in backward.
+    """
+    from repro.models import runtime_flags
+    from repro.models.layers import lm_head_apply
+    B, S, D = hidden.shape
+    if runtime_flags.COST_MODE or S <= seq_chunk:
+        logits = lm_head_apply(cfg, params.get("lm_head"), hidden,
+                               embed_params=params["embed"])
+        tot, cnt = _ce_from_logits(logits, labels, valid)
+        return tot / jnp.maximum(cnt, 1)
+    pad = (-S) % seq_chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // seq_chunk
+    hc = hidden.reshape(B, nc, seq_chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, seq_chunk).transpose(1, 0, 2)
+    vc = valid.reshape(B, nc, seq_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l, v = xs
+        logits = lm_head_apply(cfg, params.get("lm_head"), h,
+                               embed_params=params["embed"])
+        tot, cnt = _ce_from_logits(logits, l, v)
+        return (carry[0] + tot, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, lc, vc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(cfg, params, batch, *, remat=True, seq_shard=False):
+    """batch: {'tokens': (B, S+1) int32, optional 'enc_embeds',
+    'prefix_embeds'}. Labels are tokens shifted by one; -1 labels masked."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    kw = {}
+    if "enc_embeds" in batch:
+        kw["enc_tokens_embeds"] = batch["enc_embeds"]
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    hidden, _, aux = forward(cfg, params, tokens=inputs, remat=remat,
+                             seq_shard=seq_shard, return_hidden=True, **kw)
+    if "prefix_embeds" in batch:       # vision prefix produces no labels
+        hidden = hidden[:, batch["prefix_embeds"].shape[1]:]
+    valid = labels >= 0
+    nll = chunked_ce(cfg, params, hidden, labels, valid)
+    lb, rz = aux[0], aux[1]
+    total = nll + 0.01 * lb + 1e-3 * rz
+    return total, {"nll": nll, "load_balance": lb, "router_z": rz}
+
+
+def train_step(cfg, oc: OptConfig, params, opt_state, batch, *, remat=True,
+               seq_shard=False, accum_steps: int = 1):
+    """One optimizer step. ``accum_steps > 1`` splits the global batch into
+    microbatches scanned sequentially with gradient accumulation — the
+    standard memory knob when activations of the full batch don't fit."""
+    if accum_steps <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat,
+                              seq_shard=seq_shard),
+            has_aux=True)(params)
+    else:
+        micro = jax.tree.map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+
+        def body(carry, mb):
+            g_acc, l_acc, m_acc = carry
+            (l, m), g = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb, remat=remat,
+                                  seq_shard=seq_shard),
+                has_aux=True)(params)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+            return (g_acc, l_acc + l, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"nll": 0.0, "load_balance": 0.0, "router_z": 0.0}
+        (grads, loss, metrics), _ = jax.lax.scan(body, (g0, 0.0, m0), micro)
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss * inv
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+    params, opt_state, gn = adamw_update(oc, params, grads, opt_state)
+    metrics = dict(metrics, loss=loss, grad_norm=gn)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg, oc: OptConfig, *, remat=True, seq_shard=False,
+                    accum_steps: int = 1):
+    """Returns a (params, opt_state, batch) -> (params, opt_state, metrics)
+    function suitable for jax.jit(in_shardings=..., out_shardings=...)."""
+    return functools.partial(train_step, cfg, oc, remat=remat,
+                             seq_shard=seq_shard, accum_steps=accum_steps)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see ONE device (dry-run owns the 512-device trick)
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,163 @@
+"""Model attention paths: chunked vs naive agreement, decode-vs-prefill
+consistency, ring-buffer window caches, mLSTM parallel/recurrent exactness,
+RG-LRU scan vs step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import forward, init_params, make_caches
+from repro.models.attention import (chunked_attention, make_cache,
+                                    naive_attention)
+
+R = jax.random.PRNGKey
+
+
+@settings(deadline=None, max_examples=8)
+@given(s=st.integers(20, 300),
+       window=st.sampled_from([None, 16, 64]),
+       softcap=st.sampled_from([None, 30.0]))
+def test_chunked_equals_naive(s, window, softcap):
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    q = jax.random.normal(R(s), (B, s, Hq, D))
+    k = jax.random.normal(R(s + 1), (B, s, Hkv, D))
+    v = jax.random.normal(R(s + 2), (B, s, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(s), (B, s))
+    a = chunked_attention(q, k, v, pos, pos, causal=True, window=window,
+                          softcap=softcap, q_chunk=64, kv_chunk=64)
+    b = naive_attention(q, k, v, pos, pos, causal=True, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                               rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma2-27b",
+                                  "recurrentgemma-9b", "xlstm-125m"])
+def test_decode_matches_prefill(arch):
+    """Decoding token-by-token from a cache must reproduce the full-sequence
+    forward logits (the serving-correctness invariant)."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, R(0))
+    B, S = 1, 24
+    toks = jax.random.randint(R(1), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = forward(cfg, params, tokens=toks)
+
+    caches = make_caches(cfg, B, 32, dtype=jnp.float32)
+    step_logits = []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        lg, caches, _ = forward(cfg, params, tokens=toks[:, t:t + 1],
+                                positions=pos, caches=caches, mode="decode")
+        step_logits.append(lg[:, 0])
+    step_logits = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(step_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_window_ring_cache():
+    """A window-sized ring cache gives the same decode attention as an
+    unbounded cache restricted by the window mask."""
+    cfg = get_config("gemma2-27b", smoke=True)
+    from repro.models.attention import attn_decode, attn_init
+    p = attn_init(cfg, R(0))
+    B, W = 1, cfg.attn.window  # smoke window = 64
+    big = make_cache(cfg, B, 256, dtype=jnp.float32)
+    ring = make_cache(cfg, B, 256, window=W, dtype=jnp.float32)
+    assert ring["k"].shape[1] == W
+    outs_big, outs_ring = [], []
+    for t in range(100):
+        x = jax.random.normal(R(t), (B, 1, cfg.d_model), jnp.float32)
+        pos = jnp.full((B, 1), t, jnp.int32)
+        ob, big = attn_decode(cfg, p, x, pos, big, window=W)
+        orr, ring = attn_decode(cfg, p, x, pos, ring, window=W)
+        outs_big.append(ob)
+        outs_ring.append(orr)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs_big, 1)),
+                               np.asarray(jnp.concatenate(outs_ring, 1)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mlstm_parallel_equals_recurrent():
+    from repro.models.xlstm import mlstm_apply, mlstm_init, mlstm_state
+    cfg = get_config("xlstm-125m", smoke=True)
+    p = mlstm_init(cfg, R(0))
+    x = jax.random.normal(R(1), (2, 100, cfg.d_model), jnp.float32) * 0.5
+    out_par, st_par = mlstm_apply(cfg, p, x)
+    out_rec, st_rec = mlstm_apply(cfg, p, x, state=mlstm_state(cfg, 2))
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_rec),
+                               atol=2e-3, rtol=2e-2)
+    for k in ("C", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_par[k]),
+                                   np.asarray(st_rec[k]), atol=1e-3,
+                                   rtol=1e-2)
+
+
+def test_rglru_scan_equals_step():
+    from repro.models.rglru import (rglru_apply, rglru_init, rglru_state,
+                                    rglru_step)
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    p = rglru_init(cfg, R(0))
+    B, S = 2, 40
+    x = jax.random.normal(R(1), (B, S, cfg.d_model), jnp.float32)
+    out_full, st_full = rglru_apply(cfg, p, x, state=rglru_state(cfg, B))
+    st = rglru_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, st = rglru_step(cfg, p, x[:, t:t + 1], st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out_full), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_full["h"]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_fused_qkv_path_decode_matches_prefill():
+    """kv=16 triggers the fused grouped-QKV layout (§Perf iteration B2);
+    decode-from-cache must still reproduce full-forward logits."""
+    import dataclasses
+    from repro.models.config import AttnConfig, ModelConfig
+    cfg = ModelConfig(name="fused-test", arch_type="dense", n_layers=2,
+                      d_model=128, n_heads=32, n_kv_heads=16, d_ff=256,
+                      vocab_size=512, attn=AttnConfig(qkv_bias=True))
+    assert cfg.fused_qkv
+    params = init_params(cfg, R(7))
+    assert "wqkv" in params["blocks"]["blk0"]["attn"]
+    toks = jax.random.randint(R(8), (2, 16), 0, 512)
+    full, _, _ = forward(cfg, params, tokens=toks)
+    caches = make_caches(cfg, 2, 24, dtype=jnp.float32)
+    outs = []
+    for t in range(16):
+        lg, caches, _ = forward(cfg, params, tokens=toks[:, t:t + 1],
+                                positions=jnp.full((2, 1), t, jnp.int32),
+                                caches=caches, mode="decode")
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1), np.float32),
+                               np.asarray(full, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_whisper_cross_kv_cache_decode():
+    """Enc-dec serving: prefill fills the cross-KV cache; decode then runs
+    WITHOUT the encoder and must match the full forward."""
+    cfg = get_config("whisper-large-v3", smoke=True)
+    params = init_params(cfg, R(0))
+    B, S = 2, 10
+    toks = jax.random.randint(R(1), (B, S), 0, cfg.vocab_size)
+    enc = jax.random.normal(R(2), (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
+    full, _, _ = forward(cfg, params, tokens=toks, enc_tokens_embeds=enc)
+    caches = make_caches(cfg, B, 16, dtype=jnp.float32)
+    assert "ck" in caches["blk0"]
+    lg, caches, _ = forward(cfg, params, tokens=toks[:, :1], caches=caches,
+                            mode="full", enc_tokens_embeds=enc)
+    outs = [lg[:, -1]]
+    for t in range(1, S):
+        lg, caches, _ = forward(cfg, params, tokens=toks[:, t:t + 1],
+                                positions=jnp.full((B, 1), t, jnp.int32),
+                                caches=caches, mode="decode")
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1), np.float32),
+                               np.asarray(full, np.float32),
+                               atol=3e-2, rtol=3e-2)

@@ -1,0 +1,88 @@
+"""GECToR model behaviour: heads, loss, iterative correction mechanics, and
+a short-budget learning signal (full training lives in examples/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.corpus import CorpusConfig, GECCorpus
+from repro.core.gector import (gector_forward, gector_loss, init_gector,
+                               iterative_correct, predict_tags)
+from repro.core.tags import KEEP, TagVocab, apply_edits
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+CFG = get_config("gector-base", smoke=True)
+VOCAB = TagVocab(64)
+
+
+def test_heads_shapes():
+    params = init_gector(CFG, jax.random.PRNGKey(0), VOCAB)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0,
+                              CFG.vocab_size)
+    tag_logits, det_logits = gector_forward(CFG, params, toks)
+    assert tag_logits.shape == (2, 20, VOCAB.n_tags)
+    assert det_logits.shape == (2, 20, 2)
+
+
+def test_loss_masks_and_weights():
+    params = init_gector(CFG, jax.random.PRNGKey(0), VOCAB)
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                     CFG.vocab_size),
+        "tags": jnp.zeros((B, S), jnp.int32).at[:, 3].set(5),
+        "mask": jnp.ones((B, S), bool).at[:, 10:].set(False),
+    }
+    loss, metrics = gector_loss(CFG, params, batch)
+    assert jnp.isfinite(loss) and 0 <= float(metrics["tag_acc"]) <= 1
+
+
+def test_iterative_correct_applies_edits_and_stops():
+    params = init_gector(CFG, jax.random.PRNGKey(0), VOCAB)
+    sents = [np.random.randint(0, CFG.vocab_size, (np.random.randint(5, 20),))
+             for _ in range(6)]
+    fixed = iterative_correct(CFG, params, VOCAB, sents, max_iters=2)
+    assert len(fixed) == len(sents)
+    assert all(len(f) > 0 for f in fixed)
+
+
+def test_detect_gating_reduces_edits():
+    params = init_gector(CFG, jax.random.PRNGKey(0), VOCAB)
+    toks = np.random.randint(0, CFG.vocab_size, (4, 24))
+    mask = np.ones_like(toks, bool)
+    free = predict_tags(CFG, params, toks, mask, min_error_prob=0.0)
+    gated = predict_tags(CFG, params, toks, mask, min_error_prob=0.99)
+    assert np.sum(gated != KEEP) <= np.sum(free != KEEP)
+
+
+def test_gector_learns_briefly():
+    """30 steps on a high-error corpus must beat the initial loss clearly
+    (full convergence is exercised by examples/train_gector.py)."""
+    corpus = GECCorpus(CorpusConfig(vocab_size=CFG.vocab_size,
+                                    edit_words=64, error_rate=0.4, seed=0))
+    params = init_gector(CFG, jax.random.PRNGKey(0), corpus.vocab)
+    oc = OptConfig(lr=2e-3, warmup_steps=3, total_steps=40,
+                   weight_decay=0.01)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: gector_loss(CFG, pp, b), has_aux=True)(p)
+        p, o, _ = adamw_update(oc, p, g, o)
+        return p, o, l
+
+    losses = []
+    for b in corpus.batches(8, 32, 30):
+        params, opt, l = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(l))
+    assert np.mean(losses[-5:]) < 0.75 * np.mean(losses[:3])
+
+
+def test_apply_edits_semantics():
+    v = TagVocab(10)
+    toks = [5, 6, 7]
+    # REPLACE first with word 2, DELETE second, APPEND word 9 after third
+    tags = [v.replace(2), 1, v.append(9)]
+    assert apply_edits(v, toks, tags) == [2, 7, 9]

@@ -1,0 +1,170 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape/dtype
+sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.cache_matmul import vmem_bytes
+from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
+                               matmul_ref)
+
+R = jax.random.PRNGKey
+
+
+# ------------------------------------------------------------------ matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64, 64, 64), (200, 300, 170),
+                                   (128, 256, 512), (33, 65, 17)])
+def test_cache_matmul_shapes(shape, dtype):
+    M, K, N = shape
+    x = jax.random.normal(R(0), (M, K), dtype)
+    w = jax.random.normal(R(1), (K, N), dtype)
+    out = ops.matmul(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(matmul_ref(x, w)),
+                               rtol=tol, atol=tol * 10)
+
+
+@settings(deadline=None, max_examples=10)
+@given(m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150))
+def test_cache_matmul_property(m, k, n):
+    x = jax.random.normal(R(m), (m, k), jnp.float32)
+    w = jax.random.normal(R(n), (k, n), jnp.float32)
+    out = ops.matmul(x, w, bm=64, bn=64, bk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget():
+    # default tiling stays within a 16 MiB VMEM budget (the paper's cache-
+    # residency design rule, DESIGN.md §2)
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20
+    assert vmem_bytes(512, 512, 512, jnp.bfloat16) < 16 * 2**20
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("window,softcap", [(None, None), (64, None),
+                                            (None, 30.0), (32, 50.0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_variants(window, softcap, dtype):
+    B, S, Hq, Hkv, D = 2, 192, 4, 2, 64
+    q = jax.random.normal(R(0), (B, S, Hq, D), dtype)
+    k = jax.random.normal(R(1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(R(2), (B, S, Hkv, D), dtype)
+    out = ops.mha_prefill(q, k, v, causal=True, window=window,
+                          softcap=softcap, bq=64, bk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    ref = flash_attention_ref(qf, kf, vf, causal=True, window=window,
+                              softcap=softcap)
+    ref = ref.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=tol, atol=tol)
+
+
+@settings(deadline=None, max_examples=8)
+@given(s=st.integers(10, 200), hkv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]))
+def test_flash_attention_property(s, hkv, g):
+    B, D = 1, 32
+    q = jax.random.normal(R(s), (B, s, hkv * g, D), jnp.float32)
+    k = jax.random.normal(R(s + 1), (B, s, hkv, D), jnp.float32)
+    v = jax.random.normal(R(s + 2), (B, s, hkv, D), jnp.float32)
+    out = ops.mha_prefill(q, k, v, bq=64, bk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * hkv * g, s, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * hkv, s, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * hkv, s, D)
+    ref = flash_attention_ref(qf, kf, vf).reshape(
+        B, hkv * g, s, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------- decode attention
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("valid_len", [1, 17, 120])
+def test_decode_attention(window, valid_len):
+    B, Hq, Hkv, D, L = 2, 4, 2, 64, 150
+    G = Hq // Hkv
+    q = jax.random.normal(R(0), (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(R(1), (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(R(2), (B, L, Hkv, D), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(L), (B, L)).astype(jnp.int32)
+    kv_pos = jnp.where(kv_pos < valid_len, kv_pos, -1)
+    q_pos = jnp.full((B,), valid_len - 1, jnp.int32)
+    out = ops.gqa_decode(q, k, v, q_pos, kv_pos, window=window, bk=64)
+    qf = q[:, 0].reshape(B * Hkv, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)
+    ref = decode_attention_ref(qf, kf, vf, jnp.repeat(q_pos, Hkv),
+                               jnp.repeat(kv_pos, Hkv, axis=0),
+                               window=window)
+    np.testing.assert_allclose(np.asarray(out.reshape(B * Hkv, G, D)),
+                               np.asarray(ref), rtol=3e-3, atol=3e-3)
+
+
+def test_decode_matches_engine_attention():
+    """Kernel agrees with the model's own decode attention path."""
+    from repro.models.attention import naive_attention
+    B, Hq, Hkv, D, L = 1, 4, 2, 32, 64
+    q = jax.random.normal(R(3), (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(R(4), (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(R(5), (B, L, Hkv, D), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(L), (B, L)).astype(jnp.int32)
+    q_pos = jnp.full((B,), L - 1, jnp.int32)
+    out_kernel = ops.gqa_decode(q, k, v, q_pos, kv_pos)
+    out_model = naive_attention(q, k, v, q_pos[:, None], kv_pos)
+    np.testing.assert_allclose(
+        np.asarray(out_kernel[:, 0]),
+        np.asarray(out_model[:, 0].reshape(B, Hq, D)), rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- rglru scan
+@pytest.mark.parametrize("shape", [(1, 64, 128), (2, 300, 128),
+                                   (3, 100, 256)])
+def test_rglru_scan_kernel(shape):
+    from repro.kernels.ref import rglru_scan_ref
+    B, S, W = shape
+    a = (jax.nn.sigmoid(jax.random.normal(R(0), (B, S, W))) * 0.2 + 0.79)
+    b = jax.random.normal(R(1), (B, S, W)) * 0.1
+    out = ops.lru_scan(a, b, bs=64)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=6)
+@given(s=st.integers(5, 200), seed=st.integers(0, 50))
+def test_rglru_scan_property(s, seed):
+    from repro.kernels.ref import rglru_scan_ref
+    B, W = 1, 128
+    a = jax.nn.sigmoid(jax.random.normal(R(seed), (B, s, W)))
+    b = jax.random.normal(R(seed + 1), (B, s, W)) * 0.1
+    out = ops.lru_scan(a, b, bs=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(rglru_scan_ref(a, b)),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_kernel_matches_model_block():
+    """The kernel agrees with the model's RG-LRU recurrence (rglru_apply's
+    inner scan) for a carried-state-free sequence."""
+    from repro.kernels.ref import rglru_scan_ref
+    B, S, W = 2, 50, 128
+    a = jax.nn.sigmoid(jax.random.normal(R(3), (B, S, W)))
+    b = jax.random.normal(R(4), (B, S, W)) * 0.1
+    # sequential reference
+    h = jnp.zeros((B, W))
+    hs = []
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        hs.append(h)
+    seq = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(ops.lru_scan(a, b, bs=64)),
+                               np.asarray(seq), atol=1e-5, rtol=1e-4)

@@ -1,0 +1,72 @@
+"""Dry-run spec layer: input specs for every (arch x shape), admissibility
+rules, cache shapes — all shape-level (no compilation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.specs import input_specs, param_shapes
+from repro.models import make_caches
+from repro.models.config import SHAPES
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", ALL_SHAPES)
+def test_input_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    assert specs["tokens"].dtype == jnp.int32
+    if shape.mode == "decode":
+        assert specs["tokens"].shape == (B, 1)
+        assert specs["positions"].shape == (B, 1)
+        # enc-dec decode takes no encoder input (cross-KV is cached)
+        assert "enc_embeds" not in specs
+    elif shape.mode == "train":
+        s_text = shape.seq_len - cfg.vis_tokens
+        assert specs["tokens"].shape == (B, s_text + 1)
+    else:
+        s_text = shape.seq_len - cfg.vis_tokens
+        assert specs["tokens"].shape == (B, s_text)
+    if cfg.vis_tokens and shape.mode != "decode":
+        assert specs["prefix_embeds"].shape == (B, cfg.vis_tokens,
+                                                cfg.d_model)
+    if cfg.enc_layers and shape.mode != "decode":
+        assert specs["enc_embeds"].shape == (B, cfg.enc_seq_len, cfg.d_model)
+
+
+def test_long_500k_admissibility():
+    from repro.launch.dryrun import admissible  # noqa: PLC0415
+    runs = {a for a in ARCHS if get_config(a).is_subquadratic}
+    assert runs == {"xlstm-125m", "recurrentgemma-9b", "gemma2-27b"}
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "recurrentgemma-9b",
+                                  "whisper-large-v3"])
+def test_cache_shapes_bounded(arch):
+    """Local-attention layers allocate window-sized ring buffers; global
+    layers get capped at long context; enc-dec carries cross-KV."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: make_caches(cfg, 1, 524_288, long_ctx=True))
+    for j, kind in enumerate(cfg.pattern):
+        blk = shapes[f"blk{j}"]
+        if kind == "attn_local":
+            assert blk["k"].shape[2] == cfg.attn.window
+        elif kind in ("attn", "attn_global") and cfg.attn.long_ctx_window_cap:
+            assert blk["k"].shape[2] <= cfg.attn.long_ctx_window_cap
+        if cfg.enc_layers and "ck" in blk:
+            assert blk["ck"].shape[2] == cfg.enc_seq_len
+
+
+def test_param_shapes_eval_only():
+    """Full-size 27B param tree materializes as ShapeDtypeStructs only."""
+    import math
+    shapes = param_shapes(get_config("gemma2-27b"))
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    assert total > 25e9                     # full-size, never allocated
+    assert all(isinstance(x, jax.ShapeDtypeStruct)
+               for x in jax.tree.leaves(shapes))

@@ -1,0 +1,130 @@
+"""The paper's study layer: environments data integrity, perf-model fit,
+cost analysis, findings validation, corpus statistics, edit-tag algebra."""
+import numpy as np
+import pytest
+
+from repro.core import analysis, costmodel, perfsim
+from repro.core.corpus import CorpusConfig, GECCorpus
+from repro.core.environments import (INSTANCES, MACHINES, MEASURED,
+                                     NS_LADDER, PROVIDERS, instance)
+from repro.core.tags import KEEP, TagVocab, apply_edits, edit_f_beta
+
+
+# ------------------------------------------------------------ environments
+def test_experiment_matrix_is_complete():
+    # 21 paper scenarios + 1 beyond-paper TPU row
+    assert len(INSTANCES) == 22
+    for prov in PROVIDERS:
+        for m in MACHINES:
+            inst = instance(prov, m)
+            assert inst.vcpus in (4, 8)
+            cells = MEASURED[prov][m]
+            assert tuple(sorted(cells)) == tuple(sorted(NS_LADDER))
+            for ns in NS_LADDER:
+                lat, cpu, ram = cells[ns]
+                assert 0 < lat < 100 and 0 <= cpu <= 100 and 0 < ram <= 100
+
+
+def test_gpu_machines_have_gpu_and_cost_more():
+    for prov in PROVIDERS:
+        cpu_costs = [instance(prov, m).monthly_cost_usd for m in "ABCDE"]
+        for m in "FG":
+            inst = instance(prov, m)
+            assert inst.gpu == "NVIDIA T4"
+            assert inst.monthly_cost_usd > max(cpu_costs)
+
+
+# ---------------------------------------------------------------- perfsim
+def test_perfsim_fit_quality():
+    summary = perfsim.validation_summary()
+    assert summary["mean_mape"] < 0.40          # calibrated model tracks
+    # GPU machines must fit extremely well (smooth curves)
+    models = perfsim.fit_all()
+    for prov in PROVIDERS:
+        assert models[prov]["G"].mape < 0.5
+
+
+def test_perfsim_monotone_in_load():
+    m = perfsim.fit_machine("AWS", "C")
+    lat = m.predict_latency(np.array(NS_LADDER))
+    assert np.all(np.diff(lat) >= 0)
+
+
+def test_throughput_ordering_gpu_vs_cpu():
+    models = perfsim.fit_all()
+    for prov in PROVIDERS:
+        gpu_rate = min(models[prov][m].rate for m in "FG")
+        cpu_rate = max(models[prov][m].rate for m in "ABCDE")
+        assert gpu_rate > cpu_rate
+
+
+# --------------------------------------------------------------- costmodel
+def test_gpu_cost_premium_matches_table5():
+    prem = costmodel.gpu_cost_premium()
+    assert 2.0 < prem["overall"] < 3.0           # ~2.54x from Table 5
+    gf = costmodel.machine_g_vs_f_premium()
+    assert abs(gf["AWS"] - 0.43) < 0.02          # paper: 43%
+    assert abs(gf["GCP"] - 0.35) < 0.02          # paper: 35%
+    assert abs(gf["Azure"] - 0.43) < 0.02        # paper: 43%
+
+
+def test_c_vs_e_saving_aws():
+    saving = costmodel.machine_c_vs_e_saving()
+    assert abs(saving["AWS"] - 0.487) < 0.02     # paper: ~50% on AWS
+
+
+def test_slo_capacity_paper_cells():
+    # "machine C processing up to 32 sentences concurrently in under 2 s"
+    assert costmodel.max_ns_within_slo("AWS", "C") == 32
+    assert costmodel.max_ns_within_slo("AWS", "A") == 4
+
+
+# ---------------------------------------------------------------- findings
+def test_all_findings_hold():
+    f = analysis.all_findings()
+    for key in ("gpu_latency_dominance", "gpu_cost_premium",
+                "cache_dominance", "ram_non_interference",
+                "low_power_cpu_threshold"):
+        assert f[key]["holds"], (key, f[key])
+
+
+def test_cache_regression_dwarfs_clock():
+    reg = perfsim.cpu_only_feature_regression()
+    assert reg["coef"]["cache_gb"] > 3 * abs(reg["coef"]["clock_ghz"])
+
+
+# ------------------------------------------------------------------ corpus
+def test_corpus_reproduces_nucle_statistics():
+    stats = GECCorpus(CorpusConfig(seed=1)).stats(400)
+    assert abs(stats["tokens_per_sentence"] - 23) < 3
+    assert 0.02 < stats["error_rate"] < 0.15     # "low error frequency"
+
+
+def test_corruption_tags_invert_to_clean():
+    """Applying the GOLD tags to the corrupted source must reconstruct the
+    clean sentence — the generator's core invariant."""
+    corpus = GECCorpus(CorpusConfig(seed=3, error_rate=0.3))
+    checked = 0
+    for src, tags, clean in corpus.generate(50):
+        fixed = apply_edits(corpus.vocab, src, tags)
+        assert list(fixed) == list(clean), (src, tags, clean)
+        checked += 1
+    assert checked == 50
+
+
+# -------------------------------------------------------------------- tags
+def test_tag_vocab_roundtrip():
+    v = TagVocab(100)
+    for w in (0, 5, 99):
+        assert v.word_of(v.append(w)) == w and v.is_append(v.append(w))
+        assert v.word_of(v.replace(w)) == w and v.is_replace(v.replace(w))
+    assert v.n_tags == 202
+
+
+def test_edit_fbeta_perfect_and_empty():
+    g = np.array([[KEEP, 3, KEEP, 5]])
+    mask = np.ones_like(g, bool)
+    perfect = edit_f_beta(g, g, mask)
+    assert perfect["f0.5"] == pytest.approx(1.0)
+    none = edit_f_beta(np.zeros_like(g), g, mask)
+    assert none["f0.5"] == 0.0
