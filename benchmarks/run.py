@@ -4,10 +4,17 @@ quantity for that benchmark).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run --only kernels
+  PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_<name>.json
+
+``--json`` writes one ``BENCH_<name>.json`` per row (fields: name,
+us_per_call, derived) so successive PRs leave a machine-readable perf
+trajectory to diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -136,6 +143,90 @@ def bench_engine_ladder() -> list:
     return [("engine_ladder_1_to_16", us, f"slowdown={slow:.2f}x")]
 
 
+def bench_decode_hotpath() -> list:
+    """PR 'fast decode hot path' before/after numbers: KV blocks visited by
+    the block-skipping flash kernel (causal + windowed), engine decode
+    latency with the fused scan+pool path vs the seed's per-token loop, and
+    the per-batch cache-acquisition cost (pool reset-on-assign vs a fresh
+    make_caches allocation sweep)."""
+    import jax
+    import jax.numpy as jnp
+    from concurrent.futures import Future
+    from repro.configs import get_config
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models import init_params, make_caches
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.serving.engine import _Request
+    from repro.serving.kvcache import CachePool
+
+    rows = []
+
+    # --- kernel: fraction of KV blocks actually scored ------------------
+    S, bq, bk = 512, 64, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (4, S, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, S, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, S, 32), jnp.float32)
+    for label, window in (("causal", None), ("window64", 64)):
+        fa = jax.jit(lambda a, b, c, w=window: flash_attention(
+            a, b, c, causal=True, window=w, bq=bq, bk=bk,
+            return_visits=True))
+        us = _timeit(lambda: jax.block_until_ready(fa(q, k, v)[0]))
+        vis = int(np.asarray(fa(q, k, v)[1]).sum()) // q.shape[0]
+        total = (S // bq) * (S // bk)
+        rows.append((f"flash_block_skip_{label}", us,
+                     f"visited={vis}/{total}"))
+
+    # --- engine: fused scan+pool decode vs seed per-token loop ----------
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    B, T = 4, 16
+    prompts = [rng.randint(0, cfg.vocab_size, (rng.randint(4, 20),))
+               for _ in range(B)]
+
+    def serve_once(eng):
+        reqs = [_Request(np.asarray(p, np.int32), Future(),
+                         time.perf_counter()) for p in prompts]
+        eng._serve_batch(reqs)    # measure the serve path, not queue wait
+        return [r.future.result() for r in reqs]
+
+    timings = {}
+    for label, scan, pool in (("loop", False, False),
+                              ("scan_pool", True, True)):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            mode="decoder", max_batch=B, max_new_tokens=T,
+            pad_buckets=(32,), use_scan_decode=scan, use_cache_pool=pool))
+        try:
+            timings[label] = _timeit(lambda: serve_once(eng), warmup=1,
+                                     iters=5)
+        finally:
+            eng.close()
+    speedup = timings["loop"] / timings["scan_pool"]
+    rows.append(("engine_decode_loop_b4_t16", timings["loop"],
+                 f"us_per_tok={timings['loop'] / (B * T):.0f}"))
+    rows.append(("engine_decode_scan_b4_t16", timings["scan_pool"],
+                 f"us_per_tok={timings['scan_pool'] / (B * T):.0f};"
+                 f"speedup={speedup:.2f}x"))
+
+    # --- memory: per-batch cache acquisition ----------------------------
+    L = 32 + T
+    us_alloc = _timeit(lambda: jax.block_until_ready(
+        jax.tree.leaves(make_caches(cfg, B, L, dtype=jnp.float32))[0]),
+        warmup=1, iters=10)
+    cpool = CachePool(cfg, B, L, dtype=jnp.float32)
+
+    def pool_acquire():
+        slots, view = cpool.acquire(range(B))
+        cpool.release_many(slots)
+        return jax.block_until_ready(jax.tree.leaves(view)[0])
+
+    us_pool = _timeit(pool_acquire, warmup=1, iters=10)
+    rows.append(("cache_acquire_make_caches", us_alloc, f"batch={B}"))
+    rows.append(("cache_acquire_pool", us_pool,
+                 f"ratio={us_alloc / max(us_pool, 1e-9):.2f}x"))
+    return rows
+
+
 def bench_roofline_summary() -> list:
     """Dry-run roofline (from benchmarks/dryrun_single_pod.json if present);
     derived = count of pairs by dominant term."""
@@ -164,6 +255,7 @@ ALL = {
     "findings": bench_findings,
     "kernels": bench_kernels,
     "engine": bench_engine_ladder,
+    "decode_hotpath": bench_decode_hotpath,
     "roofline": bench_roofline_summary,
 }
 
@@ -171,6 +263,10 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(ALL), default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per row (perf trajectory)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for --json output files")
     args = ap.parse_args()
     names = [args.only] if args.only else list(ALL)
     print("name,us_per_call,derived")
@@ -179,6 +275,14 @@ def main() -> None:
         try:
             for row in ALL[n]():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                if args.json:
+                    path = os.path.join(args.json_dir,
+                                        f"BENCH_{row[0]}.json")
+                    with open(path, "w") as f:
+                        json.dump({"name": row[0],
+                                   "us_per_call": round(row[1], 1),
+                                   "derived": row[2]}, f, indent=2)
+                        f.write("\n")
         except Exception as e:  # noqa: BLE001
             ok = False
             print(f"{n},nan,ERROR:{e}", file=sys.stderr)

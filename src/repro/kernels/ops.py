@@ -16,6 +16,44 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# ------------------------------------------------------ attn block sizing
+# Measured overrides win over the heuristic; benchmarks/run.py (or a future
+# autotuner) populates this via register_attn_block_sizes. Keys bucket the
+# sequence lengths to the next power of two so nearby shapes share entries.
+_ATTN_BLOCK_TABLE = {}
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _block_key(kind, sq, skv, window):
+    return (kind, _pow2_ceil(max(1, sq)), _pow2_ceil(max(1, skv)), window)
+
+
+def register_attn_block_sizes(kind, sq, skv, window, bq, bk):
+    """Record a measured-best (bq, bk) for (kind, shape-bucket, window)."""
+    _ATTN_BLOCK_TABLE[_block_key(kind, sq, skv, window)] = (bq, bk)
+
+
+def attn_block_sizes(kind, sq, skv, *, window=None):
+    """(bq, bk) for the attention kernels: autotune table hit if one was
+    registered, else a heuristic — blocks shrink to the sequence (less pad
+    waste on short serving shapes, floor 16 sublanes) and, for windowed
+    attention, bk tightens toward the window so the live KV span stays at
+    O(window/bk) blocks after skipping."""
+    hit = _ATTN_BLOCK_TABLE.get(_block_key(kind, sq, skv, window))
+    if hit is not None:
+        return hit
+    bq = max(16, min(128, _pow2_ceil(sq)))
+    bk = max(16, min(128, _pow2_ceil(skv)))
+    if window is not None:
+        bk = max(16, min(bk, _pow2_ceil(window)))
+    if kind == "decode":
+        bq = 1  # single-query sweep; only bk is meaningful
+    return bq, bk
+
+
 def _pad_axis(x, axis, mult, value=0):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -40,30 +78,36 @@ def matmul(x, w, *, bm=128, bn=128, bk=128):
 
 
 def mha_prefill(q, k, v, *, causal=True, window=None, softcap=None,
-                bq=128, bk=128):
-    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+                bq=None, bk=None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+    bq/bk default to the autotune/heuristic table (attn_block_sizes)."""
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
+    hbq, hbk = attn_block_sizes("prefill", Sq, Skv, window=window)
+    bq = bq or hbq
+    bk = bk or hbk
     qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
     qf = _pad_axis(qf, 1, bq)
     kf = _pad_axis(kf, 1, bk)
     vf = _pad_axis(vf, 1, bk)
-    # padded kv columns must never win the max: they are masked because
-    # causal k_pos > real q_pos... guard explicitly via window-free pad mask
+    # kv_len masks the padded kv columns inside the kernel — the causal
+    # mask alone does not hide them when causal=False
     out = flash_attention(qf, kf, vf, causal=causal, window=window,
-                          softcap=softcap, bq=bq, bk=bk,
+                          softcap=softcap, bq=bq, bk=bk, kv_len=Skv,
                           interpret=not _on_tpu())
     out = out[:, :Sq].reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
     return out
 
 
-def gqa_decode(q, k, v, q_pos, kv_pos, *, window=None, softcap=None, bk=128):
+def gqa_decode(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
+               bk=None):
     """q: (B, 1, Hq, D); k/v cache: (B, L, Hkv, D); q_pos: (B,);
-    kv_pos: (B, L) -> (B, 1, Hq, D)."""
+    kv_pos: (B, L) -> (B, 1, Hq, D). bk defaults to the heuristic table."""
     B, _, Hq, D = q.shape
     L, Hkv = k.shape[1], k.shape[2]
+    bk = bk or attn_block_sizes("decode", 1, L, window=window)[1]
     G = Hq // Hkv
     qf = q[:, 0].reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, L, D)

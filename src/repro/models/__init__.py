@@ -1,4 +1,4 @@
 from repro.models.config import (AttnConfig, ModelConfig, MoEConfig,  # noqa
                                  ShapeConfig, SHAPES)
-from repro.models.transformer import (decode_step, forward, init_params,  # noqa
-                                      make_caches, prefill)
+from repro.models.transformer import (decode_loop, decode_step, forward,  # noqa
+                                      init_params, make_caches, prefill)

@@ -202,10 +202,15 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
             prefix_embeds=None, positions=None, caches=None,
             mode: str = "full", causal: bool = True, long_ctx: bool = False,
             enc_tokens_embeds=None, remat: bool = False,
-            return_hidden: bool = False, seq_shard: bool = False):
+            return_hidden: bool = False, seq_shard: bool = False,
+            unroll_periods: Optional[bool] = None):
     """Run the model.
 
     mode: 'full' (train/prefill) or 'decode' (single step with caches).
+    unroll_periods: None = auto (unroll the period stack for single-token
+    decode when ``n_periods`` is small — the scan's per-iteration
+    dynamic-slice machinery costs more than the whole step body at S=1;
+    measured ~2x per decode step on CPU). True/False force it.
     Returns (logits_or_hidden, new_caches, aux) where aux = (lb_loss, z_loss).
     """
     # ---- encoder (whisper) ----
@@ -273,7 +278,9 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
             body_fn = jax.checkpoint(body) if remat else body
             xs = (bp, bc) if bc is not None else bp
             from repro.models import runtime_flags
-            if runtime_flags.COST_MODE:   # unrolled: cost_analysis counts
+            unroll = (unroll_periods if unroll_periods is not None
+                      else mode == "decode" and cfg.n_periods <= 8)
+            if runtime_flags.COST_MODE:   # unrolled so cost_analysis counts
                 cs_list = []              # while-loop bodies only once
                 carry = (x, aux_total)
                 for i in range(cfg.n_periods):
@@ -284,8 +291,12 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
                 cs = (jax.tree.map(lambda *ts: jnp.stack(ts), *cs_list)
                       if cs_list and cs_list[0] is not None else None)
             else:
+                # decode steps fully unroll small period stacks: the scan's
+                # per-iteration dynamic-slice machinery costs more than the
+                # whole S=1 body (see decode_loop)
                 (x, aux_total), cs = jax.lax.scan(
-                    body_fn, (x, aux_total), xs)
+                    body_fn, (x, aux_total), xs,
+                    unroll=cfg.n_periods if unroll else 1)
             if new_caches is not None:
                 new_caches[f"blk{j}"] = cs
         return x
@@ -310,8 +321,32 @@ def prefill(cfg, params, tokens, caches, **kw):
 
 
 def decode_step(cfg, params, tokens, positions, caches, *, long_ctx=False,
-                enc_tokens_embeds=None):
+                enc_tokens_embeds=None, unroll_periods=None):
     """tokens: (B, 1) next-token ids; positions: (B, 1) absolute positions."""
     return forward(cfg, params, tokens=tokens, positions=positions,
                    caches=caches, mode="decode", long_ctx=long_ctx,
-                   enc_tokens_embeds=enc_tokens_embeds)
+                   enc_tokens_embeds=enc_tokens_embeds,
+                   unroll_periods=unroll_periods)
+
+
+def decode_loop(cfg, params, tokens, positions, caches, *, n_steps: int,
+                long_ctx=False):
+    """Greedy multi-token decode fused into one ``jax.lax.scan``.
+
+    Runs ``n_steps`` decode steps entirely on device — one dispatch instead
+    of a host round-trip per token. ``tokens``: (B, 1) the token each row
+    just generated; ``positions``: (B, 1) the absolute position that token
+    occupies (its KV is written there, matching the per-step loop this
+    replaces). Returns (generated (B, n_steps) int32, final caches); column
+    t is the token decoded t+1 steps after ``tokens``.
+    """
+    def body(carry, _):
+        tok, pos, c = carry
+        logits, c, _ = forward(cfg, params, tokens=tok, positions=pos,
+                               caches=c, mode="decode", long_ctx=long_ctx)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return (nxt, pos + 1, c), nxt
+
+    (_, _, caches), toks = jax.lax.scan(
+        body, (tokens, positions, caches), None, length=n_steps)
+    return jnp.swapaxes(toks[..., 0], 0, 1), caches

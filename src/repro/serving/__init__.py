@@ -1,2 +1,4 @@
-from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.engine import (EngineConfig, RequestTooLong,  # noqa: F401
+                                  ServingEngine)
+from repro.serving.kvcache import CachePool  # noqa: F401
 from repro.serving.scheduler import AdmissionQueue  # noqa: F401

@@ -12,11 +12,26 @@ A background worker thread drains a request queue and forms batches (up to
 ``max_batch``, waiting at most ``batch_window_ms`` — the dynamic-batching
 knob the paper's per-request Flask threading lacks). An optional
 ``AdmissionQueue`` bounds in-flight work (the paper's proposed §4
-mitigation). Per-request wall latency and batch stats are recorded so the
+mitigation): submit() try-acquires a slot and, when saturated, parks the
+request on an overflow deque; a finishing request hands its slot straight
+to the next parked one. submit() never blocks and no dispatcher thread is
+spawned per request (the old design's unbounded thread creation under
+load). Per-request wall latency and batch stats are recorded so the
 load-test client can tabulate the paper's metrics.
+
+Decoder hot path: prefill + first-token selection + the remaining
+``max_new_tokens - 1`` greedy steps are fused into a single jitted function
+(``models.decode_loop`` runs the steps as one ``jax.lax.scan``), so a batch
+costs one dispatch and one host sync instead of a Python round-trip per
+token. KV caches come from per-bucket ``CachePool``s — persistent device
+slots reset on assignment — instead of a fresh ``make_caches`` allocation
+sweep per batch. Both optimizations can be disabled (``use_scan_decode`` /
+``use_cache_pool``) to reproduce the legacy per-token path for A/B
+benchmarks and equivalence tests.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -28,8 +43,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, forward, make_caches
+from repro.models import (decode_loop, decode_step, forward, make_caches)
+from repro.serving.kvcache import CachePool
 from repro.serving.scheduler import AdmissionQueue
+
+
+class RequestTooLong(ValueError):
+    """Raised (into the request's future) when a request exceeds the largest
+    pad bucket — rejecting beats the silent truncation it replaces."""
 
 
 @dataclasses.dataclass
@@ -40,6 +61,8 @@ class EngineConfig:
     pad_buckets: tuple = (32, 64, 128, 256, 512)
     max_inflight: Optional[int] = None   # admission control; None = off
     max_new_tokens: int = 16             # decoder mode
+    use_scan_decode: bool = True         # fused lax.scan decode hot path
+    use_cache_pool: bool = True          # pooled KV slots vs per-batch alloc
 
 
 @dataclasses.dataclass
@@ -64,34 +87,98 @@ class ServingEngine:
         self.latencies: List[float] = []
         self.batch_sizes: List[int] = []
         self._stop = threading.Event()
+        # reentrant: a done-callback attached under the lock can fire
+        # synchronously (future cancelled in the attach window) and re-enter
+        self._submit_lock = threading.RLock()  # orders submit vs close
+        self._overflow = collections.deque()   # admission overflow queue
         self._compiled = {}
+        self._pools = {}                  # bucket -> CachePool
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
     # ------------------------------------------------------------- client
     def submit(self, tokens: np.ndarray) -> Future:
         fut: Future = Future()
-        req = _Request(np.asarray(tokens, np.int32), fut, time.perf_counter())
+        toks = np.asarray(tokens, np.int32)
+        if self._stop.is_set():
+            fut.set_exception(RuntimeError("engine is closed"))
+            return fut
+        try:
+            self._bucket(len(toks))
+        except RequestTooLong as e:
+            fut.set_exception(e)
+            return fut
+        req = _Request(toks, fut, time.perf_counter())
         if self._admission is not None:
-            def admit():
-                with self._admission:
-                    self._q.put(req)
-                    req.future.result()  # hold the slot until served
-            threading.Thread(target=admit, daemon=True).start()
-        else:
+            with self._submit_lock:
+                if self._stop.is_set():
+                    fut.set_exception(RuntimeError("engine is closed"))
+                    return fut
+                if self._admission.try_acquire():
+                    self._enqueue_admitted(req)
+                else:
+                    # saturated: park without blocking the submitter; a
+                    # finishing request's done-callback transfers its slot
+                    self._overflow.append(req)
+                    self._admission.note_queued(len(self._overflow))
+            return fut
+        # the lock orders this enqueue against close()'s drain: either the
+        # request lands before the drain (and is failed by it) or it sees
+        # _stop and is rejected here — it can never be silently stranded
+        with self._submit_lock:
+            if self._stop.is_set():
+                fut.set_exception(RuntimeError("engine is closed"))
+                return fut
             self._q.put(req)
         return fut
+
+    def _enqueue_admitted(self, req: _Request) -> None:
+        """Put an admitted request on the worker queue; its slot is held
+        until the future resolves, then handed to the next parked request.
+        Caller holds _submit_lock. If the future is already done (a cancel
+        won a race), add_done_callback fires synchronously in this thread —
+        safe because _submit_lock is reentrant."""
+        req.future.add_done_callback(self._on_admitted_done)
+        self._q.put(req)
+
+    def _on_admitted_done(self, _fut) -> None:
+        with self._submit_lock:
+            while self._overflow and not self._stop.is_set():
+                nxt = self._overflow.popleft()
+                if nxt.future.done():      # cancelled while parked: it
+                    continue               # holds no slot; try the next
+                self._admission.admit_transfer(
+                    time.perf_counter() - nxt.t_submit)
+                self._enqueue_admitted(nxt)
+                return
+            self._admission.release()
 
     def close(self):
         self._stop.set()
         self._worker.join(timeout=5)
+        # fail everything still parked or queued: resolves client futures
+        # (and, via the done-callbacks, frees any held admission slots)
+        with self._submit_lock:
+            pending = list(self._overflow)
+            self._overflow.clear()
+        while True:
+            try:
+                pending.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        for req in pending:
+            if not req.future.done():
+                req.future.set_exception(RuntimeError("engine is closed"))
 
     # ------------------------------------------------------------- server
     def _bucket(self, n: int) -> int:
         for b in self.ec.pad_buckets:
             if n <= b:
                 return b
-        return self.ec.pad_buckets[-1]
+        raise RequestTooLong(
+            f"request of {n} tokens exceeds the largest pad bucket "
+            f"({self.ec.pad_buckets[-1]}); split the request or configure "
+            f"larger pad_buckets")
 
     def _encoder_fn(self, bucket: int):
         if ("enc", bucket) not in self._compiled:
@@ -110,42 +197,78 @@ class ServingEngine:
             self._compiled[("enc", bucket)] = jax.jit(fn)
         return self._compiled[("enc", bucket)]
 
+    # --------------------------------------------------- decoder hot path
+    def _decode_scan_fn(self):
+        """One fused jitted function: prefill -> per-row last-position
+        argmax -> scan over the remaining steps. jit specializes it per
+        (batch, bucket) shape; one dispatch serves the whole batch."""
+        if "dec_scan" not in self._compiled:
+            T = self.ec.max_new_tokens
+
+            def fn(params, toks, lens, caches):
+                logits, caches, _ = forward(self.cfg, params, tokens=toks,
+                                            caches=caches, mode="full")
+                # first generated token: per-row logits at the row's real
+                # last position (padded rows must not sample from garbage)
+                last = jnp.take_along_axis(
+                    logits, (lens - 1)[:, None, None], axis=1)
+                tok = jnp.argmax(last[:, 0], axis=-1)[:, None]
+                tok = tok.astype(jnp.int32)
+                if T == 1:
+                    return tok, caches
+                rest, caches = decode_loop(self.cfg, params, tok,
+                                           lens[:, None], caches,
+                                           n_steps=T - 1)
+                return jnp.concatenate([tok, rest], axis=1), caches
+
+            self._compiled["dec_scan"] = jax.jit(fn)
+        return self._compiled["dec_scan"]
+
     def _decode_fns(self):
+        """Legacy per-token path (kept for A/B benchmarks + equivalence
+        tests; ``use_scan_decode=False`` selects it). unroll_periods=False
+        reproduces the seed's scanned-period step structure exactly."""
         if "dec" not in self._compiled:
             self._compiled["dec"] = (
                 jax.jit(lambda p, t, c: forward(self.cfg, p, tokens=t,
                                                 caches=c, mode="full")),
-                jax.jit(lambda p, t, pos, c: decode_step(self.cfg, p, t, pos,
-                                                         c)),
+                jax.jit(lambda p, t, pos, c: decode_step(
+                    self.cfg, p, t, pos, c, unroll_periods=False)),
             )
         return self._compiled["dec"]
 
-    def _serve_batch(self, reqs: List[_Request]):
-        lens = [len(r.tokens) for r in reqs]
-        bucket = self._bucket(max(lens))
-        B = len(reqs)
-        toks = np.zeros((B, bucket), np.int32)
-        mask = np.zeros((B, bucket), bool)
-        for i, r in enumerate(reqs):
-            L = min(len(r.tokens), bucket)
-            toks[i, :L] = r.tokens[:L]
-            mask[i, :L] = True
+    def _acquire_caches(self, B: int, bucket: int):
+        """Batch-sized decode caches: pooled slots (reset-on-assign, no
+        per-batch allocation sweep) or a fresh make_caches tree."""
+        L = bucket + self.ec.max_new_tokens
+        if not self.ec.use_cache_pool:
+            return make_caches(self.cfg, B, L, dtype=jnp.float32), None
+        pool = self._pools.get(bucket)
+        if pool is None:
+            pool = CachePool(self.cfg, self.ec.max_batch, L,
+                             dtype=jnp.float32)
+            self._pools[bucket] = pool
+        slots, view = pool.acquire([f"b{bucket}.{i}" for i in range(B)])
+        return view, (pool, slots)
 
-        if self.ec.mode == "encoder":
-            out = self._encoder_fn(bucket)(self.params, jnp.asarray(toks),
-                                           jnp.asarray(mask))
-            out = jax.device_get(out)
-            for i, r in enumerate(reqs):
-                r.future.set_result(jax.tree.map(lambda x: x[i], out))
-        else:
+    @staticmethod
+    def _release_caches(handle):
+        if handle is not None:
+            pool, slots = handle
+            pool.release_many(slots)
+
+    def _serve_decoder(self, toks, lens, bucket):
+        B = len(lens)
+        lens_a = jnp.asarray(np.array(lens, np.int32))
+        caches, handle = self._acquire_caches(B, bucket)
+        try:
+            if self.ec.use_scan_decode:
+                gen, _ = self._decode_scan_fn()(
+                    self.params, jnp.asarray(toks), lens_a, caches)
+                return np.asarray(gen)
             prefill_fn, step_fn = self._decode_fns()
-            caches = make_caches(self.cfg, B, bucket + self.ec.max_new_tokens,
-                                 dtype=jnp.float32)
             logits, caches, _ = prefill_fn(self.params, jnp.asarray(toks),
                                            caches)
-            # first generated token: per-row logits at the row's real last
-            # position (padded rows must not sample from garbage columns)
-            lens_a = jnp.asarray(np.array(lens, np.int32))
             last = jnp.take_along_axis(
                 logits, (lens_a - 1)[:, None, None], axis=1)
             tok = jnp.argmax(last[:, 0], axis=-1)[:, None].astype(jnp.int32)
@@ -156,7 +279,34 @@ class ServingEngine:
                 logits, caches, _ = step_fn(self.params, tok, pos, caches)
                 tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
                 outs.append(np.asarray(tok))
-            gen = np.concatenate(outs, axis=1)
+            return np.concatenate(outs, axis=1)
+        finally:
+            self._release_caches(handle)
+
+    def _serve_batch(self, reqs: List[_Request]):
+        # claim each future (concurrent.futures protocol): a client-side
+        # cancel() that won between enqueue and here drops the request
+        # instead of poisoning set_result for the whole batch
+        reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not reqs:
+            return
+        lens = [len(r.tokens) for r in reqs]
+        bucket = self._bucket(max(lens))
+        B = len(reqs)
+        toks = np.zeros((B, bucket), np.int32)
+        mask = np.zeros((B, bucket), bool)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.tokens)] = r.tokens
+            mask[i, :len(r.tokens)] = True
+
+        if self.ec.mode == "encoder":
+            out = self._encoder_fn(bucket)(self.params, jnp.asarray(toks),
+                                           jnp.asarray(mask))
+            out = jax.device_get(out)
+            for i, r in enumerate(reqs):
+                r.future.set_result(jax.tree.map(lambda x: x[i], out))
+        else:
+            gen = self._serve_decoder(toks, lens, bucket)
             for i, r in enumerate(reqs):
                 r.future.set_result(gen[i])
 

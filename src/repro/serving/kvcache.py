@@ -4,16 +4,67 @@ The cache pytree itself is built by ``models.make_caches`` (per-pattern
 stacked ring buffers / recurrent states); this module adds the pool view the
 engine uses: a fixed batch of slots, per-slot request ids and lengths, and
 reset-on-assign semantics so a finished request's slot is immediately
-reusable without reallocating device buffers.
+reusable without reallocating device buffers. ``assign_many`` resets a whole
+batch of slots in one fused device call (vs one ``make_caches`` allocation
+sweep per batch — the per-batch tax the engine used to pay), and
+``batch_view``/``write_back`` give the engine a contiguous batch-sized view
+of the assigned slots.
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import make_caches
+
+
+def _scatter_template(caches, template, idx):
+    """Scatter the single-slot template into slots ``idx`` (int32 (n,)) of
+    every leaf — the one definition of what 'reset' means."""
+    n = idx.shape[0]
+    return jax.tree.map(
+        lambda x, t: x.at[:, idx].set(
+            jnp.broadcast_to(t[:, :1], (t.shape[0], n) + t.shape[2:])),
+        caches, template)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _reset_slots(caches, template, idx):
+    """Reset slots in one fused scatter per leaf; the pool is donated so
+    the scatter updates in place instead of copying all n_slots."""
+    return _scatter_template(caches, template, idx)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _reset_and_view(caches, template, idx):
+    """Fused reset-on-assign + batch view (gather): one device dispatch per
+    acquire (vs an eager per-leaf allocation sweep in make_caches)."""
+    caches = _scatter_template(caches, template, idx)
+    view = jax.tree.map(lambda x: jnp.take(x, idx, axis=1), caches)
+    return caches, view
+
+
+@functools.partial(jax.jit, donate_argnums=0,
+                   static_argnames=("lo", "n"))
+def _reset_and_view_run(caches, template, *, lo, n):
+    """Contiguous-slot fast path: reset via one dynamic_update_slice region
+    and view via a static slice (no gather)."""
+    caches = jax.tree.map(
+        lambda x, t: jax.lax.dynamic_update_slice_in_dim(
+            x, jnp.broadcast_to(t[:, :1], (t.shape[0], n) + t.shape[2:]),
+            lo, axis=1),
+        caches, template)
+    view = jax.tree.map(
+        lambda x: jax.lax.slice_in_dim(x, lo, lo + n, axis=1), caches)
+    return caches, view
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _write_slots(caches, batch, idx):
+    return jax.tree.map(lambda x, b: x.at[:, idx].set(b), caches, batch)
 
 
 class CachePool:
@@ -31,18 +82,90 @@ class CachePool:
         self.request_of = [None] * n_slots       # slot -> request id
         self.lengths = [0] * n_slots
 
+    # ------------------------------------------------------- single slot
     def assign(self, request_id) -> int:
-        slot = self.request_of.index(None)
-        self.request_of[slot] = request_id
-        self.lengths[slot] = 0
-        self.caches = jax.tree.map(
-            lambda x, t: x.at[:, slot].set(t[:, 0]), self.caches,
-            self._template)
-        return slot
+        return self.assign_many([request_id])[0]
 
     def release(self, slot: int) -> None:
         self.request_of[slot] = None
         self.lengths[slot] = 0
+
+    # -------------------------------------------------------- batch slots
+    def _claim(self, request_ids: Sequence) -> List[int]:
+        """Book-keep one free slot per request; prefers a contiguous run so
+        views can slice instead of gather."""
+        ids = list(request_ids)
+        free = [i for i, r in enumerate(self.request_of) if r is None]
+        if len(ids) > len(free):
+            raise RuntimeError(
+                f"CachePool exhausted: {len(ids)} requested, "
+                f"{len(free)} of {self.n_slots} slots free")
+        slots = self._contiguous_run(free, len(ids)) or free[:len(ids)]
+        for rid, s in zip(ids, slots):
+            self.request_of[s] = rid
+            self.lengths[s] = 0
+        return slots
+
+    def assign_many(self, request_ids: Sequence) -> List[int]:
+        """Claim one slot per request and reset them all in a single fused
+        device op (reset-on-assign)."""
+        slots = self._claim(request_ids)
+        self.caches = _reset_slots(self.caches, self._template,
+                                   jnp.asarray(slots, jnp.int32))
+        return slots
+
+    @staticmethod
+    def _contiguous_run(free: List[int], n: int) -> Optional[List[int]]:
+        run: List[int] = []
+        for s in free:
+            if run and s == run[-1] + 1:
+                run.append(s)
+            else:
+                run = [s]
+            if len(run) == n:
+                return run
+        return None
+
+    def acquire(self, request_ids: Sequence):
+        """assign_many + batch_view in one fused device call — the engine's
+        per-batch fast path. Returns (slots, batch_caches). Contiguous slot
+        runs (the common case: whole batches release together) take the
+        slice path; fragmented pools fall back to a gather."""
+        slots = self._claim(request_ids)
+        lo, n = slots[0], len(slots)
+        if slots == list(range(lo, lo + n)):
+            self.caches, view = _reset_and_view_run(
+                self.caches, self._template, lo=lo, n=n)
+        else:
+            self.caches, view = _reset_and_view(
+                self.caches, self._template, jnp.asarray(slots, jnp.int32))
+        return slots, view
+
+    def release_many(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            self.release(s)
+
+    def batch_view(self, slots: Sequence[int]):
+        """Batch-sized cache pytree for the given slots (slot k of the view
+        is pool slot slots[k]). Contiguous slots -> cheap slice."""
+        slots = list(slots)
+        lo, n = slots[0], len(slots)
+        if slots == list(range(lo, lo + n)):
+            return jax.tree.map(
+                lambda x: jax.lax.slice_in_dim(x, lo, lo + n, axis=1),
+                self.caches)
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(lambda x: jnp.take(x, idx, axis=1), self.caches)
+
+    def write_back(self, slots: Sequence[int], batch_caches,
+                   lengths: Optional[Sequence[int]] = None) -> None:
+        """Store a batch view's (updated) caches back into the pool slots —
+        the persistence hook for step-granularity continuous batching."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        self.caches = _write_slots(self.caches, batch_caches, idx)
+        if lengths is not None:
+            for s, n in zip(slots, lengths):
+                self.lengths[s] = int(n)
 
     @property
     def free_slots(self) -> int:

@@ -31,7 +31,8 @@ class AdmissionQueue:
         self._waiting = 0
         self.stats = AdmissionStats()
 
-    def __enter__(self):
+    def acquire(self) -> None:
+        """Block until an in-flight slot is free (FIFO-ish via semaphore)."""
         t0 = time.perf_counter()
         with self._lock:
             self._waiting += 1
@@ -42,8 +43,36 @@ class AdmissionQueue:
             self._waiting -= 1
             self.stats.admitted += 1
             self.stats.wait_total_s += time.perf_counter() - t0
+
+    def try_acquire(self) -> bool:
+        """Non-blocking admission — the engine's submit path: a free slot
+        admits immediately; otherwise the caller parks the request on an
+        overflow queue (no dispatcher thread, no blocked submitter) and
+        reports its depth via note_queued/admit_transfer."""
+        if not self._sem.acquire(blocking=False):
+            return False
+        with self._lock:
+            self.stats.admitted += 1
+        return True
+
+    def note_queued(self, depth: int) -> None:
+        """Record the overflow-queue depth (server-side queueing stat)."""
+        with self._lock:
+            self.stats.queued_peak = max(self.stats.queued_peak, depth)
+
+    def admit_transfer(self, waited_s: float) -> None:
+        """A finishing request handed its slot straight to a queued one."""
+        with self._lock:
+            self.stats.admitted += 1
+            self.stats.wait_total_s += waited_s
+
+    def release(self) -> None:
+        self._sem.release()
+
+    def __enter__(self):
+        self.acquire()
         return self
 
     def __exit__(self, *exc):
-        self._sem.release()
+        self.release()
         return False
