@@ -101,6 +101,53 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
     return cells
 
 
+@dataclasses.dataclass
+class StaggeredResult:
+    """Open-loop (staggered-arrival) load result: the per-request view the
+    ladder's batch-synchronous cells can't give."""
+    n_requests: int
+    gap_s: float                  # inter-arrival gap (offered load knob)
+    latency_p50_s: float
+    latency_p95_s: float
+    wall_s: float
+    total_tokens: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+
+def run_staggered(engine, prompts: Sequence[np.ndarray], *, gap_s: float,
+                  sampling=None, timeout: float = 600) -> StaggeredResult:
+    """Fire one generation request every ``gap_s`` seconds (open-loop
+    arrivals, vs the ladder's closed-loop bursts) and measure per-request
+    completion latency — the workload where step-level continuous batching
+    beats batch-at-a-time: a request arriving mid-decode joins the
+    in-flight batch instead of waiting behind it, and a short-budget row
+    retires the step it finishes instead of riding out the batch. Decoder
+    engines only (uses the v2 ``generate`` API). ``sampling`` is one
+    ``SamplingParams`` for all requests or a per-prompt sequence."""
+    t0 = time.perf_counter()
+    handles = []
+    per_req = (list(sampling) if isinstance(sampling, (list, tuple))
+               else [sampling] * len(prompts))
+    for i, p in enumerate(prompts):
+        handles.append(engine.generate(p, per_req[i]))
+        if i + 1 < len(prompts):
+            time.sleep(gap_s)
+    lats, total_tokens = [], 0
+    for h in handles:
+        res = h.result(timeout=timeout)
+        # per-request completion relative to ITS arrival, not the burst's
+        lats.append(res.timing.total_s)
+        total_tokens += len(res.tokens)
+    wall = time.perf_counter() - t0
+    return StaggeredResult(n_requests=len(prompts), gap_s=gap_s,
+                           latency_p50_s=float(np.percentile(lats, 50)),
+                           latency_p95_s=float(np.percentile(lats, 95)),
+                           wall_s=wall, total_tokens=total_tokens)
+
+
 def format_table(cells: List[LoadCell]) -> str:
     lines = ["NS    latency(s)  p95(s)   vCPU%   RAM%"]
     for c in cells:

@@ -1,4 +1,5 @@
 from repro.models.config import (AttnConfig, ModelConfig, MoEConfig,  # noqa
                                  ShapeConfig, SHAPES)
-from repro.models.transformer import (decode_loop, decode_step, forward,  # noqa
-                                      init_params, make_caches, prefill)
+from repro.models.transformer import (decode_loop, decode_segment,  # noqa
+                                      decode_step, forward, init_params,
+                                      make_caches, prefill, sample_logits)

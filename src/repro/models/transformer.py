@@ -329,24 +329,110 @@ def decode_step(cfg, params, tokens, positions, caches, *, long_ctx=False,
                    unroll_periods=unroll_periods)
 
 
+def sample_logits(logits, *, temperature=None, top_k=None, seed=None,
+                  positions=None):
+    """Per-row token selection from last-step logits (B, V).
+
+    ``temperature`` (B,) float32: rows with temperature <= 0 take the greedy
+    argmax; others sample from softmax(logits / temperature), optionally
+    restricted to the row's ``top_k`` (B,) int32 highest logits (<= 0
+    disables the filter). Sampling uses a counter-based PRNG —
+    ``fold_in(fold_in(key, seed_row), position_row)`` — so the token drawn
+    for a given (seed, position) is deterministic regardless of batch
+    composition or segment boundaries: the continuous scheduler and the
+    batch-at-a-time path produce identical samples. ``temperature=None``
+    short-circuits to pure argmax (no sort / no PRNG in the graph).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if temperature is None:
+        return greedy
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    if top_k is not None:
+        k = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
+        srt = jnp.sort(lg, axis=-1)                      # ascending
+        thresh = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
+        lg = jnp.where(lg >= thresh, lg, -jnp.inf)
+    scaled = lg / jnp.maximum(temperature, 1e-6)[:, None]
+    base = jax.random.PRNGKey(0x5EED)
+    keys = jax.vmap(lambda s, p: jax.random.fold_in(
+        jax.random.fold_in(base, s), p))(seed, positions)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temperature > 0, sampled.astype(jnp.int32), greedy)
+
+
+def decode_segment(cfg, params, tokens, positions, caches, *, n_steps: int,
+                   active=None, budget=None, eos_id=None, temperature=None,
+                   top_k=None, seed=None, long_ctx=False):
+    """Masked, sampled multi-step decode — the continuous-batching core.
+
+    Runs ``n_steps`` decode steps as one ``jax.lax.scan`` over a fixed-width
+    batch in which rows retire *in-graph*: a row stops emitting the step
+    after it produces ``eos_id`` or exhausts its per-row ``budget``, without
+    any host round-trip or batch reshape. The serving engine calls this in
+    short segments and, between segments, swaps finished rows for newly
+    admitted ones (prefill-into-slot) — step-granularity continuous batching.
+
+    tokens (B, 1) int32: the token each row just generated; positions
+    (B, 1) int32: the absolute position that token occupies (its KV is
+    written there). active (B,) bool: rows that should decode (inactive rows
+    re-write their frozen (token, position) KV slot each step — idempotent,
+    so finished/empty slots stay valid with no gather/scatter). budget (B,)
+    int32: tokens the row may still emit (the per-row max_new_tokens
+    remainder). eos_id (B,) int32: per-row stop token, -1 disables.
+    temperature / top_k / seed: per-row sampling, see ``sample_logits``.
+
+    Returns (toks (B, n_steps), emitted (B, n_steps) bool, state, caches)
+    where ``toks[:, t]`` is only meaningful where ``emitted[:, t]`` and
+    ``state`` carries {tok, pos, active, budget, eos_hit} for the next
+    segment. A row's eos token *is* emitted before the row retires.
+    """
+    B = tokens.shape[0]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    if budget is None:
+        budget = jnp.full((B,), n_steps + 1, jnp.int32)
+    if eos_id is None:
+        eos_id = jnp.full((B,), -1, jnp.int32)
+
+    def body(carry, _):
+        tok, pos, act, bud, eos_hit, c = carry
+        logits, c, _ = forward(cfg, params, tokens=tok, positions=pos,
+                               caches=c, mode="decode", long_ctx=long_ctx)
+        nxt = sample_logits(logits[:, -1], temperature=temperature,
+                            top_k=top_k, seed=seed,
+                            positions=pos[:, 0] + 1)
+        emit = act
+        nxt = jnp.where(emit, nxt, tok[:, 0]).astype(jnp.int32)
+        bud = bud - emit.astype(jnp.int32)
+        hit = emit & (eos_id >= 0) & (nxt == eos_id)
+        eos_hit = eos_hit | hit
+        act = act & ~hit & (bud > 0)
+        pos = pos + emit[:, None].astype(jnp.int32)
+        return (nxt[:, None], pos, act, bud, eos_hit, c), (nxt, emit)
+
+    carry0 = (tokens, positions, active, budget, jnp.zeros((B,), bool),
+              caches)
+    (tok, pos, active, budget, eos_hit, caches), (toks, emits) = \
+        jax.lax.scan(body, carry0, None, length=n_steps)
+    state = {"tok": tok, "pos": pos, "active": active, "budget": budget,
+             "eos_hit": eos_hit}
+    return (jnp.swapaxes(toks, 0, 1), jnp.swapaxes(emits, 0, 1), state,
+            caches)
+
+
 def decode_loop(cfg, params, tokens, positions, caches, *, n_steps: int,
                 long_ctx=False):
     """Greedy multi-token decode fused into one ``jax.lax.scan``.
 
-    Runs ``n_steps`` decode steps entirely on device — one dispatch instead
-    of a host round-trip per token. ``tokens``: (B, 1) the token each row
-    just generated; ``positions``: (B, 1) the absolute position that token
-    occupies (its KV is written there, matching the per-step loop this
-    replaces). Returns (generated (B, n_steps) int32, final caches); column
-    t is the token decoded t+1 steps after ``tokens``.
+    The always-active, argmax-only special case of ``decode_segment`` (same
+    scan body; no sampling ops in the graph). ``tokens``: (B, 1) the token
+    each row just generated; ``positions``: (B, 1) the absolute position
+    that token occupies (its KV is written there, matching the per-step loop
+    this replaces). Returns (generated (B, n_steps) int32, final caches);
+    column t is the token decoded t+1 steps after ``tokens``.
     """
-    def body(carry, _):
-        tok, pos, c = carry
-        logits, c, _ = forward(cfg, params, tokens=tok, positions=pos,
-                               caches=c, mode="decode", long_ctx=long_ctx)
-        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return (nxt, pos + 1, c), nxt
-
-    (_, _, caches), toks = jax.lax.scan(
-        body, (tokens, positions, caches), None, length=n_steps)
-    return jnp.swapaxes(toks[..., 0], 0, 1), caches
+    toks, _, _, caches = decode_segment(cfg, params, tokens, positions,
+                                        caches, n_steps=n_steps,
+                                        long_ctx=long_ctx)
+    return toks, caches

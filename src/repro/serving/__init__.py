@@ -1,4 +1,8 @@
+from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS,  # noqa: F401
+                               FINISH_LENGTH, GenerationRequest,
+                               GenerationResult, HeadFn, RequestHandle,
+                               RequestTiming, SamplingParams, collect)
 from repro.serving.engine import (EngineConfig, RequestTooLong,  # noqa: F401
                                   ServingEngine)
 from repro.serving.kvcache import CachePool  # noqa: F401
-from repro.serving.scheduler import AdmissionQueue  # noqa: F401
+from repro.serving.scheduler import AdmissionQueue, RequestQueue  # noqa: F401

@@ -1,0 +1,247 @@
+"""Step-driven continuous-batching scheduler — the decoder worker that
+closes the ROADMAP's "continuous batching at step granularity" item.
+
+The batch-at-a-time worker serves a batch start-to-finish: a request
+arriving one step after a batch launches waits the batch's whole decode
+(the head-of-line blowup behind the paper's Tables 2-4 latency cliff).
+This scheduler instead drives decode in short jitted scan segments
+(``EngineConfig.decode_segment`` steps of ``models.decode_segment``) over a
+fixed batch of ``CachePool`` slots, and between segments — a host sync it
+needs anyway to stream tokens — it:
+
+  * retires rows that finished in-graph (per-row eos / budget stop),
+    releasing their pool slot and resolving their future with a
+    ``GenerationResult`` (finish_reason + queue/prefill/decode timing);
+  * retires rows whose client cancelled mid-decode;
+  * admits the best pending requests (priority order, FIFO within a
+    level) into free slots via prefill-into-slot: one jitted prefill fills
+    the new rows' KV straight into the pool (``CachePool.write_back``) and
+    selects their first token, after which they ride the same segments as
+    the rows already in flight.
+
+Rows in one in-flight set share a pad bucket (one pool / one compiled
+segment shape); when the set drains, the next bucket is chosen from the
+best pending request. Inactive slots cost compute (the segment always runs
+the full slot batch — static shapes keep it one compiled function) but re-
+write their frozen KV slot idempotently, so correctness never depends on
+occupancy. Per-segment occupancy lands in ``engine.batch_sizes`` and the
+join/segment counters in ``engine.metrics()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
+                               GenerationResult, RequestTiming)
+from repro.serving.scheduler import RequestQueue
+
+
+@dataclasses.dataclass
+class _Row:
+    req: "object"                    # engine._Request
+    slot: int
+    toks: List[int] = dataclasses.field(default_factory=list)
+
+
+class ContinuousScheduler:
+    def __init__(self, engine):
+        self.eng = engine
+        n = engine.ec.max_batch
+        self.last_tok = np.zeros(n, np.int32)   # token each row just made
+        self.pos = np.zeros(n, np.int32)        # its absolute position
+        self.active = np.zeros(n, bool)
+        self.budget = np.zeros(n, np.int32)     # tokens left to emit
+        self.eos = np.full(n, -1, np.int32)
+        self.temp = np.zeros(n, np.float32)
+        self.topk = np.zeros(n, np.int32)
+        self.seed = np.zeros(n, np.int32)
+        self.rows = {}                          # slot -> _Row
+        self.bucket: Optional[int] = None       # in-flight set's pad bucket
+        self.pending = RequestQueue()
+
+    # ------------------------------------------------------------ worker
+    def run(self):
+        eng = self.eng
+        try:
+            while not eng._stop.is_set():
+                try:
+                    self._drain(block=not self.rows and not self.pending)
+                    self._admit()
+                    if self.rows:
+                        self._segment()
+                except Exception as e:  # surfaced to the affected clients
+                    self._fail_inflight(e)
+        finally:
+            self._shutdown()
+
+    def _drain(self, block: bool) -> None:
+        """Move newly submitted requests into the priority-pending set;
+        when idle, block briefly so the loop doesn't spin."""
+        try:
+            while True:
+                req = (self.eng._q.get(timeout=0.05) if block
+                       else self.eng._q.get_nowait())
+                block = False
+                self.pending.push(req, req.priority)
+        except queue.Empty:
+            pass
+
+    # --------------------------------------------------------- admission
+    def _admit(self) -> None:
+        eng = self.eng
+        if not self.pending:
+            return
+        drop = lambda r: r.future.done()    # noqa: E731 — cancelled in queue
+        claimed = []
+        if not self.rows:
+            # set drained: the best pending request picks the next bucket
+            first = self.pending.pop(drop=drop)
+            if first is None:
+                return
+            self.bucket = eng._bucket(len(first.tokens))
+            claimed.append(first)
+        pool = eng._get_pool(self.bucket)
+        in_bucket = lambda r: eng._bucket(len(r.tokens)) == self.bucket  # noqa: E731
+        while pool.free_slots > len(claimed):
+            r = self.pending.pop(pred=in_bucket, drop=drop)
+            if r is None:
+                break
+            claimed.append(r)
+        claimed = [r for r in claimed
+                   if r.future.set_running_or_notify_cancel()]
+        if not claimed:
+            return
+        if self.rows:
+            eng._stats["joins_mid_flight"] += len(claimed)
+        self._prefill(claimed, pool)
+
+    def _prefill(self, claimed, pool) -> None:
+        """Prefill-into-slot: fill the new rows' KV straight into pool
+        slots and emit their first token; they join the in-flight set for
+        the next segment. A failure anywhere (compile error, pool
+        exhaustion, ...) must not strand the claimed requests — their
+        futures are already RUNNING and outside self.rows, so run()'s
+        _fail_inflight can't see them: fail them here and release any
+        slots that never became rows, then keep serving."""
+        try:
+            self._prefill_inner(claimed, pool)
+        except Exception as e:
+            live = {id(row.req) for row in self.rows.values()}
+            for slot, rid in enumerate(pool.request_of):
+                if rid in {id(r) for r in claimed} and slot not in self.rows:
+                    pool.release(slot)
+            for r in claimed:
+                if id(r) not in live and not r.future.done():
+                    r.future.set_exception(e)
+
+    def _prefill_inner(self, claimed, pool) -> None:
+        eng = self.eng
+        t0 = time.perf_counter()
+        B, bucket = len(claimed), self.bucket
+        # gather acquire: one compiled variant per join size, not per slot
+        # run position (joins land at arbitrary offsets mid-serve)
+        slots, view = pool.acquire([id(r) for r in claimed], gather=True)
+        toks = np.zeros((B, bucket), np.int32)
+        lens = np.zeros(B, np.int32)
+        for i, r in enumerate(claimed):
+            r.t_start = t0
+            toks[i, :len(r.tokens)] = r.tokens
+            lens[i] = len(r.tokens)
+        temp, topk, seed, eos, budget, any_sample = \
+            eng._sampling_arrays(claimed)
+        sargs = ((jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(seed))
+                 if any_sample else (None, None, None))
+        first, caches = eng._prefill_fn()(
+            eng.params, jnp.asarray(toks), jnp.asarray(lens), view, *sargs)
+        pool.write_back(slots, caches, lengths=[int(x) + 1 for x in lens])
+        first = np.asarray(first)
+        eng._stats["prefill_batches"] += 1
+        t1 = time.perf_counter()
+        for i, (r, s) in enumerate(zip(claimed, slots)):
+            r.t_prefill_done = t1
+            tok = int(first[i])
+            row = _Row(req=r, slot=s, toks=[tok])
+            self.rows[s] = row
+            r.handle._push([tok])
+            self.last_tok[s] = tok
+            self.pos[s] = lens[i]           # first token sits at len(prompt)
+            self.budget[s] = budget[i] - 1  # the first token spent one
+            self.eos[s], self.temp[s] = eos[i], temp[i]
+            self.topk[s], self.seed[s] = topk[i], seed[i]
+            hit = eos[i] >= 0 and tok == eos[i]
+            if hit or self.budget[s] <= 0:
+                self._finish(row, FINISH_EOS if hit else FINISH_LENGTH, t1)
+            else:
+                self.active[s] = True
+
+    # ------------------------------------------------------ decode steps
+    def _segment(self) -> None:
+        eng = self.eng
+        pool = eng._get_pool(self.bucket)
+        any_sample = any(self.temp[s] > 0 for s in self.rows)
+        sargs = ((jnp.asarray(self.temp), jnp.asarray(self.topk),
+                  jnp.asarray(self.seed)) if any_sample
+                 else (None, None, None))
+        toks, emits, state, caches = eng._segment_fn()(
+            eng.params, jnp.asarray(self.last_tok[:, None]),
+            jnp.asarray(self.pos[:, None]), pool.caches,
+            jnp.asarray(self.active), jnp.asarray(self.budget),
+            jnp.asarray(self.eos), *sargs)
+        pool.caches = caches
+        toks, emits = np.asarray(toks), np.asarray(emits)
+        st_active = np.asarray(state["active"])
+        st_eos = np.asarray(state["eos_hit"])
+        self.last_tok = np.asarray(state["tok"])[:, 0].copy()
+        self.pos = np.asarray(state["pos"])[:, 0].copy()
+        self.budget = np.asarray(state["budget"]).copy()
+        self.active = st_active.copy()
+        eng.batch_sizes.append(len(self.rows))   # per-segment occupancy
+        eng._stats["decode_segments"] += 1
+        now = time.perf_counter()
+        for s, row in list(self.rows.items()):
+            new = toks[s][emits[s]].tolist()
+            row.toks.extend(new)
+            row.req.handle._push(new)
+            pool.lengths[s] = int(self.pos[s]) + 1
+            if not st_active[s]:
+                self._finish(row, FINISH_EOS if st_eos[s] else FINISH_LENGTH,
+                             now)
+            elif row.req.handle.cancel_requested:
+                self._finish(row, FINISH_CANCELLED, now)
+
+    # ------------------------------------------------------------ retire
+    def _finish(self, row: _Row, reason: str, now: float) -> None:
+        eng = self.eng
+        r = row.req
+        del self.rows[row.slot]
+        eng._get_pool(self.bucket).release(row.slot)
+        self.active[row.slot] = False
+        timing = RequestTiming(queue_s=r.t_start - r.t_submit,
+                               prefill_s=r.t_prefill_done - r.t_start,
+                               decode_s=now - r.t_prefill_done)
+        eng.timings.append(timing)
+        eng.latencies.append(now - r.t_submit)
+        r.future.set_result(GenerationResult(
+            tokens=np.asarray(row.toks, np.int32), finish_reason=reason,
+            timing=timing, request_id=r.handle.request.request_id))
+
+    def _fail_inflight(self, exc: Exception) -> None:
+        for row in list(self.rows.values()):
+            del self.rows[row.slot]
+            self.eng._get_pool(self.bucket).release(row.slot)
+            self.active[row.slot] = False
+            if not row.req.future.done():
+                row.req.future.set_exception(exc)
+
+    def _shutdown(self) -> None:
+        err = RuntimeError("engine is closed")
+        self._fail_inflight(err)
+        for r in self.pending.drain():
+            if not r.future.done():
+                r.future.set_exception(err)

@@ -5,47 +5,53 @@ Two modes, matching the two model kinds in the repo:
   * 'encoder' — one bidirectional forward per request batch (GECToR: the
     paper's workload). Requests are token sequences; responses are the
     model's per-token outputs (edit tags for GECToR).
-  * 'decoder' — prefill + autoregressive decode with a KV-cache pool
-    (continuous batching at step granularity).
+  * 'decoder' — prefill + autoregressive decode with a KV-cache pool.
 
-A background worker thread drains a request queue and forms batches (up to
-``max_batch``, waiting at most ``batch_window_ms`` — the dynamic-batching
-knob the paper's per-request Flask threading lacks). An optional
-``AdmissionQueue`` bounds in-flight work (the paper's proposed §4
-mitigation): submit() try-acquires a slot and, when saturated, parks the
-request on an overflow deque; a finishing request hands its slot straight
-to the next parked one. submit() never blocks and no dispatcher thread is
-spawned per request (the old design's unbounded thread creation under
-load). Per-request wall latency and batch stats are recorded so the
-load-test client can tabulate the paper's metrics.
+Decoder requests go through the typed v2 lifecycle (``serving.api``):
+``engine.generate(GenerationRequest | tokens)`` returns a
+``RequestHandle`` (streaming iterator + future) that resolves to a
+``GenerationResult`` (tokens, finish_reason, per-phase timing). The default
+decoder worker is the step-driven continuous scheduler
+(``serving.continuous``): decode runs in short jitted scan segments over a
+fixed slot batch; between segments finished rows retire (per-row eos /
+max_new_tokens stop in-graph, see ``models.decode_segment``) and newly
+admitted requests prefill straight into free ``CachePool`` slots — a
+request submitted mid-decode joins the in-flight batch instead of waiting
+behind it. ``continuous=False`` keeps the PR-1 batch-at-a-time worker for
+A/B equivalence runs: a background thread drains the queue and forms
+batches (up to ``max_batch``, waiting at most ``batch_window_ms``), serving
+prefill + first-token + the remaining steps as one jitted
+``models.decode_segment`` call (``use_scan_decode=False`` further falls
+back to the seed's per-token Python loop).
 
-Decoder hot path: prefill + first-token selection + the remaining
-``max_new_tokens - 1`` greedy steps are fused into a single jitted function
-(``models.decode_loop`` runs the steps as one ``jax.lax.scan``), so a batch
-costs one dispatch and one host sync instead of a Python round-trip per
-token. KV caches come from per-bucket ``CachePool``s — persistent device
-slots reset on assignment — instead of a fresh ``make_caches`` allocation
-sweep per batch. Both optimizations can be disabled (``use_scan_decode`` /
-``use_cache_pool``) to reproduce the legacy per-token path for A/B
-benchmarks and equivalence tests.
+An optional ``AdmissionQueue`` bounds in-flight work (the paper's proposed
+§4 mitigation): submit try-acquires a slot and, when saturated, parks the
+request on a priority-ordered overflow queue; a finishing request hands its
+slot to the best parked one. Submission never blocks and no dispatcher
+thread is spawned per request. Per-request wall latency, per-phase timing,
+and batch-occupancy stats are recorded so the load-test client can tabulate
+the paper's metrics — and the per-phase split it cannot see.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (decode_loop, decode_step, forward, make_caches)
+from repro.models import (decode_segment, decode_step, forward, make_caches,
+                          sample_logits)
+from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
+                               GenerationRequest, GenerationResult, HeadFn,
+                               RequestHandle, RequestTiming, SamplingParams)
 from repro.serving.kvcache import CachePool
-from repro.serving.scheduler import AdmissionQueue
+from repro.serving.scheduler import AdmissionQueue, RequestQueue
 
 
 class RequestTooLong(ValueError):
@@ -60,23 +66,60 @@ class EngineConfig:
     batch_window_ms: float = 2.0
     pad_buckets: tuple = (32, 64, 128, 256, 512)
     max_inflight: Optional[int] = None   # admission control; None = off
-    max_new_tokens: int = 16             # decoder mode
+    max_new_tokens: int = 16             # decoder: per-request budget cap
     use_scan_decode: bool = True         # fused lax.scan decode hot path
     use_cache_pool: bool = True          # pooled KV slots vs per-batch alloc
+    # step-level continuous batching (decoder mode; requires scan + pool —
+    # otherwise the engine falls back to the batch-at-a-time worker).
+    # False = batch-at-a-time, kept for A/B equivalence runs.
+    continuous: bool = True
+    decode_segment: int = 4              # decode steps per jitted segment
 
 
 @dataclasses.dataclass
 class _Request:
+    """Internal carrier. Legacy paths (encoder mode, raw benchmarks) build
+    it with the three positional fields; v2 decoder requests also carry
+    sampling params, priority, and the client handle."""
     tokens: np.ndarray
     future: Future
     t_submit: float
+    sampling: Optional[SamplingParams] = None
+    budget: int = 0                   # effective max_new_tokens
+    priority: int = 0
+    handle: Optional[RequestHandle] = None
+    t_start: float = 0.0              # worker picked it up (prefill start)
+    t_prefill_done: float = 0.0
+
+
+def _trim_host(gen: np.ndarray, eos: np.ndarray, budget: np.ndarray):
+    """Host-side emission trim for the batch-at-a-time path: a row's output
+    ends at its budget or just after its first eos token. Token-identical
+    to the in-graph retirement the continuous path does (sampling is
+    counter-based per position, so tokens after a row's stop point never
+    influence the kept prefix)."""
+    B, T = gen.shape
+    emits = np.zeros((B, T), bool)
+    eos_hit = np.zeros(B, bool)
+    for i in range(B):
+        n = int(min(budget[i], T))
+        if eos[i] >= 0:
+            where = np.where(gen[i, :n] == eos[i])[0]
+            if where.size:
+                n = int(where[0]) + 1
+                eos_hit[i] = True
+        emits[i, :n] = True
+    return emits, eos_hit
 
 
 class ServingEngine:
     def __init__(self, cfg, params, engine_cfg: EngineConfig,
-                 head_fn: Optional[Callable] = None):
-        """head_fn(hidden (B,S,d)) -> per-request payload; defaults to
-        hidden states (encoder) / sampled tokens (decoder)."""
+                 head_fn: Optional[HeadFn] = None):
+        """``head_fn(params, hidden, mask)`` — see ``serving.api.HeadFn``:
+        called inside the jitted encoder function with the full parameter
+        tree, final hidden states (B, S, d_model) and the validity mask
+        (B, S); returns the per-request payload. Defaults to hidden states
+        (encoder) / generated tokens (decoder)."""
         self.cfg = cfg
         self.params = params
         self.ec = engine_cfg
@@ -86,18 +129,91 @@ class ServingEngine:
                            if engine_cfg.max_inflight else None)
         self.latencies: List[float] = []
         self.batch_sizes: List[int] = []
+        self.timings: List[RequestTiming] = []    # v2 per-phase breakdowns
+        self._stats = {"decode_segments": 0, "joins_mid_flight": 0,
+                       "prefill_batches": 0}
         self._stop = threading.Event()
         # reentrant: a done-callback attached under the lock can fire
         # synchronously (future cancelled in the attach window) and re-enter
         self._submit_lock = threading.RLock()  # orders submit vs close
-        self._overflow = collections.deque()   # admission overflow queue
+        self._overflow = RequestQueue()        # admission overflow (priority)
         self._compiled = {}
         self._pools = {}                  # bucket -> CachePool
-        self._worker = threading.Thread(target=self._run, daemon=True)
+        self.continuous_active = (
+            engine_cfg.mode == "decoder" and engine_cfg.continuous
+            and engine_cfg.use_scan_decode and engine_cfg.use_cache_pool)
+        if self.continuous_active:
+            from repro.serving.continuous import ContinuousScheduler
+            self._scheduler = ContinuousScheduler(self)
+            target = self._scheduler.run
+        else:
+            target = self._run
+        self._worker = threading.Thread(target=target, daemon=True)
         self._worker.start()
 
     # ------------------------------------------------------------- client
+    def generate(self, request, sampling: Optional[SamplingParams] = None,
+                 *, priority: int = 0,
+                 request_id: Optional[str] = None) -> RequestHandle:
+        """Submit a typed generation request (decoder mode).
+
+        ``request`` is a ``GenerationRequest`` or a raw token array (then
+        ``sampling``/``priority``/``request_id`` build one). Returns a
+        ``RequestHandle`` immediately; validation errors (``RequestTooLong``,
+        bad sampling params) resolve the handle's future exceptionally
+        rather than raising here, so submission never throws mid-burst.
+        """
+        if self.ec.mode != "decoder":
+            raise ValueError("generate() requires mode='decoder'; encoder "
+                             "mode serves via submit()")
+        if not isinstance(request, GenerationRequest):
+            request = GenerationRequest(
+                tokens=np.asarray(request, np.int32),
+                sampling=sampling or SamplingParams(),
+                priority=priority, request_id=request_id)
+        fut: Future = Future()
+        handle = RequestHandle(request, fut)
+        toks = np.asarray(request.tokens, np.int32)
+        try:
+            if self._stop.is_set():
+                raise RuntimeError("engine is closed")
+            budget = request.sampling.validate(self.ec.max_new_tokens)
+            if (request.sampling.temperature > 0
+                    and not self.ec.use_scan_decode):
+                raise ValueError("sampling (temperature > 0) requires "
+                                 "use_scan_decode=True")
+            self._bucket(len(toks))
+        except Exception as e:  # surfaced through the handle
+            fut.set_exception(e)
+            return handle
+        req = _Request(toks, fut, time.perf_counter(),
+                       sampling=request.sampling, budget=budget,
+                       priority=request.priority, handle=handle)
+        self._submit_req(req)
+        return handle
+
     def submit(self, tokens: np.ndarray) -> Future:
+        """v1 shim, kept for the seed API: untyped tokens in, future out.
+
+        Encoder mode: unchanged. Decoder mode: deprecated — delegates to
+        ``generate()`` with default (greedy) ``SamplingParams`` and returns
+        a future resolving to the bare token array; cancelling the returned
+        future does not cancel the underlying request (use the handle API).
+        """
+        if self.ec.mode == "decoder":
+            h = self.generate(tokens)
+            out: Future = Future()
+
+            def relay(f):
+                if f.cancelled():
+                    out.cancel()
+                elif f.exception() is not None:
+                    out.set_exception(f.exception())
+                else:
+                    out.set_result(f.result().tokens)
+
+            h.future.add_done_callback(relay)
+            return out
         fut: Future = Future()
         toks = np.asarray(tokens, np.int32)
         if self._stop.is_set():
@@ -108,29 +224,33 @@ class ServingEngine:
         except RequestTooLong as e:
             fut.set_exception(e)
             return fut
-        req = _Request(toks, fut, time.perf_counter())
+        self._submit_req(_Request(toks, fut, time.perf_counter()))
+        return fut
+
+    def _submit_req(self, req: _Request) -> None:
+        """Admission + enqueue, shared by submit() and generate()."""
         if self._admission is not None:
             with self._submit_lock:
                 if self._stop.is_set():
-                    fut.set_exception(RuntimeError("engine is closed"))
-                    return fut
+                    req.future.set_exception(RuntimeError("engine is closed"))
+                    return
                 if self._admission.try_acquire():
                     self._enqueue_admitted(req)
                 else:
                     # saturated: park without blocking the submitter; a
                     # finishing request's done-callback transfers its slot
-                    self._overflow.append(req)
+                    # to the best-priority parked request
+                    self._overflow.push(req, req.priority)
                     self._admission.note_queued(len(self._overflow))
-            return fut
+            return
         # the lock orders this enqueue against close()'s drain: either the
         # request lands before the drain (and is failed by it) or it sees
         # _stop and is rejected here — it can never be silently stranded
         with self._submit_lock:
             if self._stop.is_set():
-                fut.set_exception(RuntimeError("engine is closed"))
-                return fut
+                req.future.set_exception(RuntimeError("engine is closed"))
+                return
             self._q.put(req)
-        return fut
 
     def _enqueue_admitted(self, req: _Request) -> None:
         """Put an admitted request on the worker queue; its slot is held
@@ -143,14 +263,14 @@ class ServingEngine:
 
     def _on_admitted_done(self, _fut) -> None:
         with self._submit_lock:
-            while self._overflow and not self._stop.is_set():
-                nxt = self._overflow.popleft()
-                if nxt.future.done():      # cancelled while parked: it
-                    continue               # holds no slot; try the next
-                self._admission.admit_transfer(
-                    time.perf_counter() - nxt.t_submit)
-                self._enqueue_admitted(nxt)
-                return
+            if not self._stop.is_set():
+                # requests cancelled while parked hold no slot: drop them
+                nxt = self._overflow.pop(drop=lambda r: r.future.done())
+                if nxt is not None:
+                    self._admission.admit_transfer(
+                        time.perf_counter() - nxt.t_submit)
+                    self._enqueue_admitted(nxt)
+                    return
             self._admission.release()
 
     def close(self):
@@ -159,8 +279,7 @@ class ServingEngine:
         # fail everything still parked or queued: resolves client futures
         # (and, via the done-callbacks, frees any held admission slots)
         with self._submit_lock:
-            pending = list(self._overflow)
-            self._overflow.clear()
+            pending = self._overflow.drain()
         while True:
             try:
                 pending.append(self._q.get_nowait())
@@ -198,27 +317,54 @@ class ServingEngine:
         return self._compiled[("enc", bucket)]
 
     # --------------------------------------------------- decoder hot path
+    def _sampling_arrays(self, reqs: List[_Request]):
+        """Per-row sampling/stop arrays from a request batch; legacy
+        requests (no SamplingParams) default to greedy full-budget rows."""
+        T = self.ec.max_new_tokens
+        B = len(reqs)
+        temp = np.zeros(B, np.float32)
+        topk = np.zeros(B, np.int32)
+        seed = np.zeros(B, np.int32)
+        eos = np.full(B, -1, np.int32)
+        budget = np.full(B, T, np.int32)
+        any_sample = False
+        for i, r in enumerate(reqs):
+            sp = r.sampling
+            if sp is None:
+                continue
+            budget[i] = r.budget
+            if sp.eos_id is not None:
+                eos[i] = sp.eos_id
+            if sp.temperature > 0:
+                any_sample = True
+                temp[i] = sp.temperature
+                topk[i] = sp.top_k or 0
+                seed[i] = sp.seed
+        return temp, topk, seed, eos, budget, any_sample
+
     def _decode_scan_fn(self):
         """One fused jitted function: prefill -> per-row last-position
-        argmax -> scan over the remaining steps. jit specializes it per
-        (batch, bucket) shape; one dispatch serves the whole batch."""
+        first-token selection -> ``decode_segment`` over the remaining
+        steps. jit specializes it per (batch, bucket) shape — and per
+        sampling-on/off (greedy batches pass None and keep the sort/PRNG
+        out of the graph); one dispatch serves the whole batch."""
         if "dec_scan" not in self._compiled:
             T = self.ec.max_new_tokens
 
-            def fn(params, toks, lens, caches):
+            def fn(params, toks, lens, caches, temp, topk, seed):
                 logits, caches, _ = forward(self.cfg, params, tokens=toks,
                                             caches=caches, mode="full")
                 # first generated token: per-row logits at the row's real
                 # last position (padded rows must not sample from garbage)
                 last = jnp.take_along_axis(
-                    logits, (lens - 1)[:, None, None], axis=1)
-                tok = jnp.argmax(last[:, 0], axis=-1)[:, None]
-                tok = tok.astype(jnp.int32)
+                    logits, (lens - 1)[:, None, None], axis=1)[:, 0]
+                tok = sample_logits(last, temperature=temp, top_k=topk,
+                                    seed=seed, positions=lens)[:, None]
                 if T == 1:
                     return tok, caches
-                rest, caches = decode_loop(self.cfg, params, tok,
-                                           lens[:, None], caches,
-                                           n_steps=T - 1)
+                rest, _, _, caches = decode_segment(
+                    self.cfg, params, tok, lens[:, None], caches,
+                    n_steps=T - 1, temperature=temp, top_k=topk, seed=seed)
                 return jnp.concatenate([tok, rest], axis=1), caches
 
             self._compiled["dec_scan"] = jax.jit(fn)
@@ -226,8 +372,9 @@ class ServingEngine:
 
     def _decode_fns(self):
         """Legacy per-token path (kept for A/B benchmarks + equivalence
-        tests; ``use_scan_decode=False`` selects it). unroll_periods=False
-        reproduces the seed's scanned-period step structure exactly."""
+        tests; ``use_scan_decode=False`` selects it; greedy only).
+        unroll_periods=False reproduces the seed's scanned-period step
+        structure exactly."""
         if "dec" not in self._compiled:
             self._compiled["dec"] = (
                 jax.jit(lambda p, t, c: forward(self.cfg, p, tokens=t,
@@ -237,17 +384,57 @@ class ServingEngine:
             )
         return self._compiled["dec"]
 
+    def _prefill_fn(self):
+        """Continuous-batching prefill-into-slot: fill the rows' pool-slot
+        caches and select each row's first token. jit specializes per
+        (n_new, bucket) shape."""
+        if "cont_prefill" not in self._compiled:
+            def fn(params, toks, lens, caches, temp, topk, seed):
+                logits, caches, _ = forward(self.cfg, params, tokens=toks,
+                                            caches=caches, mode="full")
+                last = jnp.take_along_axis(
+                    logits, (lens - 1)[:, None, None], axis=1)[:, 0]
+                tok = sample_logits(last, temperature=temp, top_k=topk,
+                                    seed=seed, positions=lens)
+                return tok, caches
+            self._compiled["cont_prefill"] = jax.jit(fn)
+        return self._compiled["cont_prefill"]
+
+    def _segment_fn(self):
+        """One jitted decode segment over the full slot batch (the
+        continuous scheduler's step core). The pool caches are donated:
+        the segment updates them in place and the scheduler swaps in the
+        returned tree."""
+        if "cont_segment" not in self._compiled:
+            seg = self.ec.decode_segment
+
+            def fn(params, tok, pos, caches, active, budget, eos,
+                   temp, topk, seed):
+                return decode_segment(self.cfg, params, tok, pos, caches,
+                                      n_steps=seg, active=active,
+                                      budget=budget, eos_id=eos,
+                                      temperature=temp, top_k=topk,
+                                      seed=seed)
+
+            self._compiled["cont_segment"] = jax.jit(fn, donate_argnums=3)
+        return self._compiled["cont_segment"]
+
+    def _get_pool(self, bucket: int) -> CachePool:
+        pool = self._pools.get(bucket)
+        if pool is None:
+            pool = CachePool(self.cfg, self.ec.max_batch,
+                             bucket + self.ec.max_new_tokens,
+                             dtype=jnp.float32)
+            self._pools[bucket] = pool
+        return pool
+
     def _acquire_caches(self, B: int, bucket: int):
         """Batch-sized decode caches: pooled slots (reset-on-assign, no
         per-batch allocation sweep) or a fresh make_caches tree."""
-        L = bucket + self.ec.max_new_tokens
         if not self.ec.use_cache_pool:
+            L = bucket + self.ec.max_new_tokens
             return make_caches(self.cfg, B, L, dtype=jnp.float32), None
-        pool = self._pools.get(bucket)
-        if pool is None:
-            pool = CachePool(self.cfg, self.ec.max_batch, L,
-                             dtype=jnp.float32)
-            self._pools[bucket] = pool
+        pool = self._get_pool(bucket)
         slots, view = pool.acquire([f"b{bucket}.{i}" for i in range(B)])
         return view, (pool, slots)
 
@@ -257,29 +444,44 @@ class ServingEngine:
             pool, slots = handle
             pool.release_many(slots)
 
-    def _serve_decoder(self, toks, lens, bucket):
+    def _serve_decoder(self, toks, lens, bucket, reqs):
+        """Batch-at-a-time decode. Returns (gen (B, T), emits (B, T) bool,
+        eos_hit (B,) bool) — emits marks each row's kept prefix (its budget
+        / first-eos trim)."""
         B = len(lens)
+        temp, topk, seed, eos, budget, any_sample = \
+            self._sampling_arrays(reqs)
         lens_a = jnp.asarray(np.array(lens, np.int32))
         caches, handle = self._acquire_caches(B, bucket)
         try:
             if self.ec.use_scan_decode:
+                sargs = ((jnp.asarray(temp), jnp.asarray(topk),
+                          jnp.asarray(seed)) if any_sample
+                         else (None, None, None))
                 gen, _ = self._decode_scan_fn()(
-                    self.params, jnp.asarray(toks), lens_a, caches)
-                return np.asarray(gen)
-            prefill_fn, step_fn = self._decode_fns()
-            logits, caches, _ = prefill_fn(self.params, jnp.asarray(toks),
-                                           caches)
-            last = jnp.take_along_axis(
-                logits, (lens_a - 1)[:, None, None], axis=1)
-            tok = jnp.argmax(last[:, 0], axis=-1)[:, None].astype(jnp.int32)
-            outs = [np.asarray(tok)]
-            pos = lens_a[:, None] - 1
-            for _ in range(self.ec.max_new_tokens - 1):
-                pos = pos + 1
-                logits, caches, _ = step_fn(self.params, tok, pos, caches)
-                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-                outs.append(np.asarray(tok))
-            return np.concatenate(outs, axis=1)
+                    self.params, jnp.asarray(toks), lens_a, caches, *sargs)
+                gen = np.asarray(gen)
+            else:
+                if any_sample:
+                    raise ValueError("sampling requires use_scan_decode")
+                prefill_fn, step_fn = self._decode_fns()
+                logits, caches, _ = prefill_fn(self.params,
+                                               jnp.asarray(toks), caches)
+                last = jnp.take_along_axis(
+                    logits, (lens_a - 1)[:, None, None], axis=1)
+                tok = jnp.argmax(last[:, 0], axis=-1)[:, None]
+                tok = tok.astype(jnp.int32)
+                outs = [np.asarray(tok)]
+                pos = lens_a[:, None] - 1
+                for _ in range(self.ec.max_new_tokens - 1):
+                    pos = pos + 1
+                    logits, caches, _ = step_fn(self.params, tok, pos, caches)
+                    tok = jnp.argmax(logits[:, -1:], axis=-1)
+                    tok = tok.astype(jnp.int32)
+                    outs.append(np.asarray(tok))
+                gen = np.concatenate(outs, axis=1)
+            emits, eos_hit = _trim_host(gen, eos, budget)
+            return gen, emits, eos_hit
         finally:
             self._release_caches(handle)
 
@@ -306,9 +508,27 @@ class ServingEngine:
             for i, r in enumerate(reqs):
                 r.future.set_result(jax.tree.map(lambda x: x[i], out))
         else:
-            gen = self._serve_decoder(toks, lens, bucket)
+            t_serve = time.perf_counter()
+            gen, emits, eos_hit = self._serve_decoder(toks, lens, bucket,
+                                                      reqs)
+            t_done = time.perf_counter()
             for i, r in enumerate(reqs):
-                r.future.set_result(gen[i])
+                if r.handle is None:    # legacy raw-batch caller
+                    r.future.set_result(gen[i])
+                    continue
+                row = np.asarray(gen[i][emits[i]], np.int32)
+                timing = RequestTiming(queue_s=t_serve - r.t_submit,
+                                       prefill_s=0.0,
+                                       decode_s=t_done - t_serve)
+                self.timings.append(timing)
+                if r.handle.cancel_requested:  # cancel landed mid-serve
+                    reason = FINISH_CANCELLED
+                else:
+                    reason = FINISH_EOS if eos_hit[i] else FINISH_LENGTH
+                r.handle._push(row)
+                r.future.set_result(GenerationResult(
+                    tokens=row, finish_reason=reason, timing=timing,
+                    request_id=r.handle.request.request_id))
 
         now = time.perf_counter()
         self.batch_sizes.append(B)
@@ -340,13 +560,31 @@ class ServingEngine:
 
     # ------------------------------------------------------------ metrics
     def metrics(self) -> dict:
-        lat = np.array(self.latencies) if self.latencies else np.zeros(1)
-        m = {"requests": len(self.latencies),
-             "latency_mean_s": float(lat.mean()),
-             "latency_p50_s": float(np.percentile(lat, 50)),
-             "latency_p95_s": float(np.percentile(lat, 95)),
-             "batch_size_mean": float(np.mean(self.batch_sizes))
-             if self.batch_sizes else 0.0}
+        """Aggregate serving stats. With no completed requests the latency
+        percentiles are None (never fabricated from a zero sample)."""
+        n = len(self.latencies)
+        m = {"requests": n}
+        if n:
+            lat = np.array(self.latencies)
+            m.update(latency_mean_s=float(lat.mean()),
+                     latency_p50_s=float(np.percentile(lat, 50)),
+                     latency_p95_s=float(np.percentile(lat, 95)))
+        else:
+            m.update(latency_mean_s=None, latency_p50_s=None,
+                     latency_p95_s=None)
+        m["batch_size_mean"] = (float(np.mean(self.batch_sizes))
+                                if self.batch_sizes else 0.0)
+        if self.timings:
+            m["queue_wait_mean_s"] = float(
+                np.mean([t.queue_s for t in self.timings]))
+            m["prefill_mean_s"] = float(
+                np.mean([t.prefill_s for t in self.timings]))
+            m["decode_mean_s"] = float(
+                np.mean([t.decode_s for t in self.timings]))
+        if self.continuous_active:
+            # batch_sizes holds per-segment occupancy in continuous mode
+            m["batch_occupancy_mean"] = m["batch_size_mean"]
+            m.update(self._stats)
         if self._admission is not None:
             m["admission_peak_queue"] = self._admission.stats.queued_peak
             m["admission_wait_total_s"] = self._admission.stats.wait_total_s

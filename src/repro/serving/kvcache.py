@@ -126,14 +126,19 @@ class CachePool:
                 return run
         return None
 
-    def acquire(self, request_ids: Sequence):
+    def acquire(self, request_ids: Sequence, *, gather: bool = False):
         """assign_many + batch_view in one fused device call — the engine's
         per-batch fast path. Returns (slots, batch_caches). Contiguous slot
         runs (the common case: whole batches release together) take the
-        slice path; fragmented pools fall back to a gather."""
+        slice path; fragmented pools fall back to a gather. ``gather=True``
+        forces the gather variant: its jit specializes only on the slot
+        *count*, not the (lo, n) run position, so callers that acquire at
+        arbitrary offsets mid-serve (the continuous scheduler's
+        prefill-into-slot) compile one variant per batch size instead of
+        one per run position."""
         slots = self._claim(request_ids)
         lo, n = slots[0], len(slots)
-        if slots == list(range(lo, lo + n)):
+        if not gather and slots == list(range(lo, lo + n)):
             self.caches, view = _reset_and_view_run(
                 self.caches, self._template, lo=lo, n=n)
         else:

@@ -11,9 +11,55 @@ queue wait grows linearly. examples/serve_poc.py measures both modes.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
+from typing import List
+
+
+class RequestQueue:
+    """Priority-aware request ordering (admission overflow + the continuous
+    scheduler's pending set): pop returns the highest-priority entry, FIFO
+    within a priority level. Not thread-safe — callers hold the engine's
+    submit lock (overflow) or own the worker thread (pending)."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, item, priority: int = 0) -> None:
+        heapq.heappush(self._heap, (-priority, next(self._seq), item))
+
+    def pop(self, pred=None, drop=None):
+        """Pop the best item for which ``pred`` holds (default: any).
+        Entries matching ``drop`` (e.g. requests cancelled while queued)
+        are discarded during the scan; entries failing ``pred`` are kept.
+        Returns None when no item qualifies."""
+        kept, best = [], None
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            if drop is not None and drop(entry[2]):
+                continue
+            if pred is None or pred(entry[2]):
+                best = entry[2]
+                break
+            kept.append(entry)
+        for entry in kept:
+            heapq.heappush(self._heap, entry)
+        return best
+
+    def drain(self) -> List:
+        items = [e[2] for e in sorted(self._heap)]
+        self._heap.clear()
+        return items
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
 
 
 @dataclass

@@ -1,0 +1,320 @@
+"""Serving API v2: typed request lifecycle (GenerationRequest ->
+RequestHandle -> GenerationResult), streaming, per-row eos/budget stops,
+seeded sampling, step-level continuous batching (mid-decode joins,
+batch-at-a-time equivalence), priority scheduling, and the admission-control
+edge cases (parked-cancel slot safety, close() failing parked + queued,
+RequestTooLong through the handle)."""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (EngineConfig, GenerationRequest, GenerationResult,
+                           RequestTooLong, SamplingParams, ServingEngine)
+
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+RNG = np.random.RandomState(11)
+
+
+def _engine(**kw):
+    base = dict(mode="decoder", max_batch=4, max_new_tokens=6,
+                pad_buckets=(16,), decode_segment=2)
+    base.update(kw)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base))
+
+
+def _prompt(n=None):
+    return RNG.randint(0, CFG.vocab_size, (n or RNG.randint(3, 12),))
+
+
+# --------------------------------------------------------- request lifecycle
+def test_generate_returns_typed_result_with_timing():
+    eng = _engine()
+    try:
+        h = eng.generate(GenerationRequest(tokens=_prompt(),
+                                           request_id="req-1"))
+        res = h.result(timeout=300)
+        assert isinstance(res, GenerationResult)
+        assert res.request_id == "req-1"
+        assert res.finish_reason == "length"
+        assert res.tokens.shape == (6,) and res.tokens.dtype == np.int32
+        t = res.timing
+        assert t.queue_s >= 0 and t.prefill_s >= 0 and t.decode_s >= 0
+        assert t.total_s == pytest.approx(t.queue_s + t.prefill_s
+                                          + t.decode_s)
+    finally:
+        eng.close()
+
+
+def test_per_request_max_new_tokens_budget():
+    eng = _engine()
+    try:
+        h2 = eng.generate(_prompt(), SamplingParams(max_new_tokens=2))
+        h5 = eng.generate(_prompt(), SamplingParams(max_new_tokens=5))
+        r2, r5 = h2.result(timeout=300), h5.result(timeout=300)
+        assert len(r2.tokens) == 2 and r2.finish_reason == "length"
+        assert len(r5.tokens) == 5 and r5.finish_reason == "length"
+    finally:
+        eng.close()
+
+
+def test_eos_stops_row_early_with_reason_eos():
+    eng = _engine()
+    try:
+        p = _prompt()
+        greedy = eng.generate(p).result(timeout=300).tokens
+        eos = int(greedy[0])   # first emitted token => stops after 1
+        res = eng.generate(p, SamplingParams(eos_id=eos)).result(timeout=300)
+        assert res.finish_reason == "eos"
+        assert res.tokens.tolist() == [eos]     # eos token is included
+        # an eos somewhere mid-stream trims there (first occurrence)
+        later = next((i for i, t in enumerate(greedy[1:], 1)
+                      if t != greedy[0]), None)
+        if later is not None:
+            res2 = eng.generate(p, SamplingParams(
+                eos_id=int(greedy[later]))).result(timeout=300)
+            assert res2.finish_reason == "eos"
+            assert res2.tokens.tolist() == greedy[:later + 1].tolist()
+    finally:
+        eng.close()
+
+
+def test_streaming_iterator_yields_all_tokens():
+    eng = _engine()
+    try:
+        h = eng.generate(_prompt())
+        streamed = list(h)
+        assert streamed == h.result(timeout=10).tokens.tolist()
+        assert list(h) == []      # re-iteration terminates, never blocks
+    finally:
+        eng.close()
+
+
+def test_sampling_params_validated_through_handle():
+    eng = _engine()
+    try:
+        with pytest.raises(ValueError):
+            eng.generate(_prompt(),
+                         SamplingParams(max_new_tokens=99)).result(10)
+        with pytest.raises(ValueError):
+            eng.generate(_prompt(),
+                         SamplingParams(temperature=-1.0)).result(10)
+        assert eng.generate(_prompt()).result(timeout=300) is not None
+    finally:
+        eng.close()
+
+
+def test_seeded_sampling_deterministic_and_topk1_is_greedy():
+    eng = _engine()
+    try:
+        p = _prompt()
+        a = eng.generate(p, SamplingParams(temperature=0.7, top_k=8,
+                                           seed=5)).result(300).tokens
+        b = eng.generate(p, SamplingParams(temperature=0.7, top_k=8,
+                                           seed=5)).result(300).tokens
+        assert (a == b).all()                   # same seed -> same tokens
+        g = eng.generate(p).result(300).tokens
+        k1 = eng.generate(p, SamplingParams(temperature=2.0,
+                                            top_k=1)).result(300).tokens
+        assert (g == k1).all()                  # top_k=1 collapses to greedy
+    finally:
+        eng.close()
+
+
+def test_encoder_mode_rejects_generate():
+    cfg = get_config("gector-base", smoke=True)
+    eng = ServingEngine(cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                        EngineConfig(mode="encoder", max_batch=2))
+    try:
+        with pytest.raises(ValueError):
+            eng.generate(np.zeros(4, np.int32))
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------ continuous batching
+def test_mid_decode_join_observable_in_metrics():
+    """A request submitted while another decodes must join the in-flight
+    batch (continuous batching), not wait behind it."""
+    eng = _engine(max_new_tokens=24, decode_segment=2)
+    try:
+        eng.generate(_prompt()).result(timeout=300)   # warm the compiles
+        h1 = eng.generate(_prompt())
+        it = iter(h1)
+        next(it)                     # first segment done => decode underway
+        h2 = eng.generate(_prompt())
+        r1, r2 = h1.result(timeout=300), h2.result(timeout=300)
+        assert len(r1.tokens) == 24 and len(r2.tokens) == 24
+        m = eng.metrics()
+        assert m["joins_mid_flight"] >= 1
+        assert m["decode_segments"] > 0
+        assert m["batch_occupancy_mean"] > 0
+    finally:
+        eng.close()
+
+
+def test_continuous_matches_batch_at_a_time_greedy():
+    """Acceptance: the scan-segment continuous path is token-identical to
+    the legacy batch-at-a-time path under greedy sampling."""
+    prompts = [_prompt() for _ in range(3)]
+    outs = {}
+    for cont in (False, True):
+        eng = _engine(continuous=cont)
+        try:
+            hs = [eng.generate(p) for p in prompts]
+            outs[cont] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for a, b in zip(outs[False], outs[True]):
+        assert (a == b).all()
+
+
+def test_batch_at_a_time_still_serves_v2_requests():
+    eng = _engine(continuous=False)
+    try:
+        res = eng.generate(_prompt(),
+                           SamplingParams(max_new_tokens=3)).result(300)
+        assert len(res.tokens) == 3 and res.finish_reason == "length"
+        assert res.timing.queue_s >= 0
+    finally:
+        eng.close()
+
+
+def test_batch_at_a_time_honors_mid_serve_cancel_flag():
+    """The batch worker's whole serve is one segment: a cancel landing
+    mid-serve must still surface as finish_reason='cancelled'."""
+    eng = _engine(continuous=False)
+    try:
+        h = eng.generate(_prompt())
+        h._cancel.set()        # deterministically: flag set, future races on
+        res = h.result(timeout=300)
+        assert res.finish_reason == "cancelled"
+        assert h.cancelled()
+    finally:
+        eng.close()
+
+
+def test_priority_orders_pending_requests():
+    """With one slot, the high-priority request submitted last must be
+    served before the earlier low-priority one."""
+    eng = _engine(max_batch=1, max_new_tokens=8)
+    try:
+        eng.generate(_prompt()).result(timeout=300)   # warm compiles
+        order = []
+        blocker = eng.generate(_prompt())             # occupies the slot
+        lo = eng.generate(_prompt(), priority=0)
+        hi = eng.generate(_prompt(), priority=5)
+        lo.add_done_callback(lambda _f: order.append("lo"))
+        hi.add_done_callback(lambda _f: order.append("hi"))
+        for h in (blocker, lo, hi):
+            h.result(timeout=300)
+        assert order.index("hi") < order.index("lo")
+    finally:
+        eng.close()
+
+
+def test_cancel_mid_decode_finishes_cancelled():
+    eng = _engine(max_new_tokens=24, decode_segment=2)
+    try:
+        eng.generate(_prompt()).result(timeout=300)   # warm compiles
+        h = eng.generate(_prompt())
+        it = iter(h)
+        next(it)                                      # decode underway
+        assert h.cancel()
+        res = h.result(timeout=300)
+        assert res.finish_reason == "cancelled"
+        assert 0 < len(res.tokens) < 24               # partial output kept
+        assert h.cancelled()
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------- admission-control edges
+def test_parked_cancel_does_not_leak_admission_slot():
+    eng = _engine(max_inflight=1, max_new_tokens=4)
+    try:
+        eng.generate(_prompt()).result(timeout=300)   # warm compiles
+        a = eng.generate(_prompt())                   # holds the one slot
+        b = eng.generate(_prompt())                   # parked
+        c = eng.generate(_prompt())                   # parked behind b
+        assert b.cancel()
+        with pytest.raises(CancelledError):
+            b.result(timeout=10)
+        # a's slot must hand over past the cancelled b straight to c
+        assert a.result(timeout=300).finish_reason == "length"
+        assert c.result(timeout=300).finish_reason == "length"
+    finally:
+        eng.close()
+
+
+def test_close_fails_parked_and_queued_requests():
+    eng = _engine(max_inflight=1, max_new_tokens=16)
+    hs = [eng.generate(_prompt()) for _ in range(4)]
+    eng.close()
+    failures = 0
+    for h in hs:
+        try:
+            h.result(timeout=30)
+        except RuntimeError:
+            failures += 1
+            with pytest.raises(RuntimeError):
+                list(h)    # stream must terminate (re-raising), not hang
+    assert failures >= 2   # at least the parked ones fail fast
+
+
+def test_request_too_long_surfaces_through_handle():
+    eng = _engine()
+    try:
+        h = eng.generate(np.zeros(64, np.int32))      # > 16 bucket
+        with pytest.raises(RequestTooLong):
+            h.result(timeout=10)
+        with pytest.raises(RequestTooLong):
+            list(h)                                   # stream re-raises
+        assert h.done()
+    finally:
+        eng.close()
+
+
+def test_prefill_failure_fails_request_without_leaking_slots():
+    """A transient error during prefill-into-slot must surface to the
+    affected request's future (not strand it RUNNING forever), release its
+    pool slot, and leave the engine serving."""
+    eng = _engine()
+    try:
+        eng.generate(_prompt()).result(timeout=300)   # warm compiles
+        real = eng._prefill_fn()
+        calls = {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("injected prefill failure")
+            return real(*a, **kw)
+
+        eng._compiled["cont_prefill"] = flaky
+        h = eng.generate(_prompt())
+        with pytest.raises(RuntimeError, match="injected"):
+            h.result(timeout=60)
+        pool = eng._get_pool(16)
+        assert pool.free_slots == eng.ec.max_batch    # slot released
+        ok = eng.generate(_prompt()).result(timeout=300)
+        assert ok.finish_reason == "length"           # engine still serves
+    finally:
+        eng.close()
+
+
+def test_metrics_empty_engine_reports_zero_requests():
+    eng = _engine()
+    try:
+        m = eng.metrics()
+        assert m["requests"] == 0
+        assert m["latency_mean_s"] is None
+        assert m["latency_p50_s"] is None and m["latency_p95_s"] is None
+    finally:
+        eng.close()
