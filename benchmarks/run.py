@@ -331,6 +331,42 @@ def bench_continuous_batching() -> list:
     return rows
 
 
+def bench_deploy_lab() -> list:
+    """Deployment-lab harness: one profile x one ladder scenario through
+    ExperimentRunner + drift_report. us_per_call times the whole grid;
+    derived = records emitted + findings ledger coverage (must list every
+    paper finding) — the rot check for the experiment subsystem."""
+    import jax
+    from repro.configs import get_config
+    from repro.deploy.profiles import profile
+    from repro.deploy.report import PAPER_FINDINGS, drift_report
+    from repro.deploy.runner import ExperimentRunner, WorkloadScenario
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg = get_config("gector-base", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def factory(scenario):
+        eng = ServingEngine(cfg, params,
+                            EngineConfig(mode="encoder", max_batch=4,
+                                         pad_buckets=(32,)))
+        rng = np.random.RandomState(0)
+        sents = [rng.randint(0, cfg.vocab_size, (16,)) for _ in range(32)]
+        return eng, sents, None
+
+    scenario = WorkloadScenario(name="bench", ladder=(1, 2), repeats=1)
+    runner = ExperimentRunner(factory)
+    t0 = time.perf_counter()
+    records = runner.run_grid([profile("AWS", "C")], [scenario])
+    report = drift_report(records)
+    us = (time.perf_counter() - t0) * 1e6
+    listed = sum(1 for k in PAPER_FINDINGS if k in report["findings"])
+    return [("deploy_lab_grid", us,
+             f"records={len(records)};"
+             f"findings={listed}/{len(PAPER_FINDINGS)}")]
+
+
 def bench_roofline_summary() -> list:
     """Dry-run roofline (from benchmarks/dryrun_single_pod.json if present);
     derived = count of pairs by dominant term."""
@@ -361,6 +397,7 @@ ALL = {
     "engine": bench_engine_ladder,
     "decode_hotpath": bench_decode_hotpath,
     "continuous_batching": bench_continuous_batching,
+    "deploy_lab": bench_deploy_lab,
     "roofline": bench_roofline_summary,
 }
 

@@ -1,6 +1,10 @@
 """Cost analysis reproducing the paper's Table-5-derived claims, plus
 cost-efficiency metrics the paper implies but does not compute
-(US$ per million sentences within the 2 s SLO)."""
+(US$ per million sentences within the 2 s SLO).
+
+Prices come from ``deploy.profiles`` (the single price book); the measured
+counterparts of these static numbers are computed by ``deploy.costs`` from
+live ``ExperimentRecord`` data and diffed in ``deploy.report``."""
 from __future__ import annotations
 
 from typing import Dict
@@ -64,8 +68,7 @@ def cost_per_million_sentences() -> Dict[str, Dict[str, float]]:
                 continue
             lat = MEASURED[prov][mach][ns][0]
             sent_per_s = ns / max(lat, 1e-6)
-            inst = instance(prov, mach)
-            usd_per_s = inst.monthly_cost_usd / (730 * 3600)
+            usd_per_s = instance(prov, mach).hourly_cost_usd / 3600
             out[prov][mach] = usd_per_s / sent_per_s * 1e6
     return out
 

@@ -1,64 +1,26 @@
 """Load-test client — the paper's simulation flow (Fig. 7) against our
 engine: submit 2^N concurrent sentences (N = 0..9), repeat R times, record
 latency plus host CPU%/RAM% sampled from /proc (the Prometheus role).
+
+The /proc samplers live in ``repro.deploy.telemetry`` (the deployment
+lab's generalized ring-buffer sampler); this module imports the aggregate
+``CpuSampler`` view back from there.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.core.environments import NS_LADDER
-
-
-def _read_proc_stat():
-    with open("/proc/stat") as f:
-        parts = f.readline().split()
-    vals = list(map(int, parts[1:]))
-    idle = vals[3] + vals[4]
-    return sum(vals), idle
+from repro.deploy.telemetry import CpuSampler, read_ram_pct  # noqa: F401
 
 
 def _ram_pct() -> float:
-    info = {}
-    with open("/proc/meminfo") as f:
-        for line in f:
-            k, v = line.split(":")
-            info[k] = int(v.split()[0])
-    return 100.0 * (1 - info["MemAvailable"] / info["MemTotal"])
-
-
-class CpuSampler:
-    def __init__(self, period_s: float = 0.1):
-        self.period = period_s
-        self.samples: List[float] = []
-        self._stop = threading.Event()
-        self._t: Optional[threading.Thread] = None
-
-    def __enter__(self):
-        def run():
-            prev = _read_proc_stat()
-            while not self._stop.wait(self.period):
-                cur = _read_proc_stat()
-                dt, didle = cur[0] - prev[0], cur[1] - prev[1]
-                if dt > 0:
-                    self.samples.append(100.0 * (1 - didle / dt))
-                prev = cur
-        self._t = threading.Thread(target=run, daemon=True)
-        self._t.start()
-        return self
-
-    def __exit__(self, *exc):
-        self._stop.set()
-        self._t.join(timeout=2)
-        return False
-
-    @property
-    def mean(self) -> float:
-        return float(np.mean(self.samples)) if self.samples else 0.0
+    pct = read_ram_pct()
+    return 0.0 if pct is None else pct
 
 
 @dataclasses.dataclass
@@ -82,6 +44,11 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
         engine.submit(sentences[0]).result(timeout=600)
         engine.latencies.clear()
         engine.batch_sizes.clear()
+        # re-sync the engine's window() cursors with the truncated lists
+        # (a stale cursor would silently hide post-clear samples)
+        win = getattr(engine, "window", None)
+        if win is not None:
+            win()
     cells = []
     for ns in ladder:
         lats = []
@@ -104,13 +71,19 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
 @dataclasses.dataclass
 class StaggeredResult:
     """Open-loop (staggered-arrival) load result: the per-request view the
-    ladder's batch-synchronous cells can't give."""
+    ladder's batch-synchronous cells can't give — including the mean
+    queue/prefill/decode split each ``RequestTiming`` already carries, so a
+    latency regression is attributable to a phase without re-running."""
     n_requests: int
     gap_s: float                  # inter-arrival gap (offered load knob)
     latency_p50_s: float
     latency_p95_s: float
     wall_s: float
     total_tokens: int
+    queue_mean_s: float = 0.0     # phase split (means over requests)
+    prefill_mean_s: float = 0.0
+    decode_mean_s: float = 0.0
+    queue_p95_s: float = 0.0      # the head-of-line tail specifically
 
     @property
     def tokens_per_s(self) -> float:
@@ -135,17 +108,23 @@ def run_staggered(engine, prompts: Sequence[np.ndarray], *, gap_s: float,
         handles.append(engine.generate(p, per_req[i]))
         if i + 1 < len(prompts):
             time.sleep(gap_s)
-    lats, total_tokens = [], 0
+    lats, total_tokens, timings = [], 0, []
     for h in handles:
         res = h.result(timeout=timeout)
         # per-request completion relative to ITS arrival, not the burst's
         lats.append(res.timing.total_s)
+        timings.append(res.timing)
         total_tokens += len(res.tokens)
     wall = time.perf_counter() - t0
-    return StaggeredResult(n_requests=len(prompts), gap_s=gap_s,
-                           latency_p50_s=float(np.percentile(lats, 50)),
-                           latency_p95_s=float(np.percentile(lats, 95)),
-                           wall_s=wall, total_tokens=total_tokens)
+    return StaggeredResult(
+        n_requests=len(prompts), gap_s=gap_s,
+        latency_p50_s=float(np.percentile(lats, 50)),
+        latency_p95_s=float(np.percentile(lats, 95)),
+        wall_s=wall, total_tokens=total_tokens,
+        queue_mean_s=float(np.mean([t.queue_s for t in timings])),
+        prefill_mean_s=float(np.mean([t.prefill_s for t in timings])),
+        decode_mean_s=float(np.mean([t.decode_s for t in timings])),
+        queue_p95_s=float(np.percentile([t.queue_s for t in timings], 95)))
 
 
 def format_table(cells: List[LoadCell]) -> str:

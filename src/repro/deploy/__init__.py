@@ -1,0 +1,47 @@
+"""Deployment lab — the live counterpart of the paper's experiment protocol.
+
+The paper's contribution is a *protocol*, not a table: 7 machine classes
+across 3 providers, repeated load experiments, real-time latency + hardware
+usage + cost. ``repro.core`` replays the paper's published numbers;
+this package re-runs the protocol against the serving engine built in this
+repo:
+
+  * ``profiles``  — executable environment profiles (provider x machine
+    specs + the price book), the single source of truth that
+    ``core.environments`` / ``core.costmodel`` re-export from;
+  * ``telemetry`` — background hardware sampler (per-core CPU, RAM,
+    page-fault proxy) with ring-buffer timelines and percentile summaries;
+  * ``runner``    — the profile x scenario experiment grid, emitting
+    structured ``ExperimentRecord`` JSONL;
+  * ``costs``     — live cost accounting from *measured* throughput
+    ($ / 1M sentences, GPU-vs-CPU break-even, cheapest-SLO selection);
+  * ``report``    — the drift report: paper findings recomputed from
+    measured data and diffed against ``core.analysis`` expectations.
+
+Import layering: ``profiles`` and ``telemetry`` are leaf modules (``core``
+imports *them*); ``runner``/``costs``/``report`` sit above ``core`` and
+``serving`` and are therefore loaded lazily here to keep
+``core.environments -> deploy.profiles`` cycle-free.
+"""
+from repro.deploy.profiles import (HOURS_PER_MONTH,  # noqa: F401
+                                   LATENCY_SLO_S, MACHINES, NS_LADDER,
+                                   PROFILES, PROVIDERS, EnvironmentProfile,
+                                   paper_profiles, profile, profile_by_key)
+from repro.deploy.telemetry import (CpuSampler, HardwareSampler,  # noqa: F401
+                                    TelemetrySample, TelemetryTimeline)
+
+_LAZY = {
+    "ExperimentRecord": "repro.deploy.runner",
+    "ExperimentRunner": "repro.deploy.runner",
+    "WorkloadScenario": "repro.deploy.runner",
+    "drift_report": "repro.deploy.report",
+    "format_drift": "repro.deploy.report",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(name)
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,145 @@
+"""Deployment-lab launcher: re-run the paper's provider x machine grid
+against the live serving engine and diff the result against the paper.
+
+  # CI smoke: 2 profiles x 1 ladder scenario on the tiny GECToR encoder
+  PYTHONPATH=src python -m repro.launch.experiment --smoke
+
+  # a bigger CPU-machine grid, 3 repeats, plus a decoder staggered run
+  PYTHONPATH=src python -m repro.launch.experiment \
+      --profiles AWS/A AWS/C GCP/C --ladder 1 4 16 64 --repeats 3 \
+      --staggered --arch qwen2-0.5b
+
+Artifacts (written to --out-dir):
+  EXPERIMENT_grid.jsonl   one ExperimentRecord per (profile x scenario)
+  EXPERIMENT_drift.json   drift_report(): measured $/1M sentences,
+                          cheapest-SLO machine, GPU-vs-CPU premium and the
+                          findings ledger, each diffed vs core.analysis
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.deploy.profiles import paper_profiles, profile_by_key
+from repro.deploy.report import drift_report, format_drift, write_report
+from repro.deploy.runner import (KIND_LADDER, KIND_STAGGERED,
+                                 ExperimentRunner, WorkloadScenario,
+                                 smoke_grid_profiles)
+from repro.models import init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+GRID_FILE = "EXPERIMENT_grid.jsonl"
+DRIFT_FILE = "EXPERIMENT_drift.json"
+
+
+def make_engine_factory(args):
+    """(scenario) -> (engine, sentences, sampling) on the chosen arch.
+
+    Encoder scenarios run the paper's workload (GECToR); decoder scenarios
+    run --arch through the continuous scheduler so the experiment exercises
+    the serving path every scaling PR touches.
+    """
+    def factory(scenario: WorkloadScenario):
+        arch = "gector-base" if scenario.mode == "encoder" else args.arch
+        cfg = get_config(arch, smoke=args.smoke)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, EngineConfig(
+            mode=scenario.mode, max_batch=args.max_batch,
+            pad_buckets=(args.bucket,),
+            max_new_tokens=scenario.max_new_tokens,
+            max_inflight=args.max_inflight))
+        rng = np.random.default_rng(args.seed)
+        sentences = [rng.integers(0, cfg.vocab_size,
+                                  (int(rng.integers(8, args.bucket // 2
+                                                    + 8)),))
+                     for _ in range(64)]
+        # compile every batch shape here, not inside the first profile's
+        # measured window (the grid's first row would otherwise carry
+        # seconds of compile latency the later rows don't)
+        eng.warmup()
+        sampling = (SamplingParams(max_new_tokens=scenario.max_new_tokens)
+                    if scenario.mode == "decoder" else None)
+        return eng, sentences, sampling
+    return factory
+
+
+def build_scenarios(args) -> list:
+    scenarios = [WorkloadScenario(name="ladder", kind=KIND_LADDER,
+                                  mode="encoder",
+                                  ladder=tuple(args.ladder),
+                                  repeats=args.repeats)]
+    if args.staggered:
+        scenarios.append(WorkloadScenario(
+            name="staggered", kind=KIND_STAGGERED, mode="decoder",
+            n_requests=args.requests, gap_s=args.gap,
+            max_new_tokens=args.max_new_tokens))
+    return scenarios
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid: 2 profiles x (1,2) ladder, smoke "
+                         "configs — the CI acceptance run")
+    ap.add_argument("--profiles", nargs="*", default=None,
+                    metavar="PROV/MACHINE",
+                    help="profile keys (e.g. AWS/C); default: smoke pair "
+                         "with --smoke, all 21 paper profiles otherwise")
+    ap.add_argument("--ladder", type=int, nargs="*", default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--staggered", action="store_true",
+                    help="add the open-loop decoder scenario")
+    ap.add_argument("--arch", default="qwen2-0.5b",
+                    choices=ARCHS + ["gector-base"],
+                    help="decoder arch for --staggered")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gap", type=float, default=0.05)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-inflight", type=int, default=None)
+    ap.add_argument("--bucket", type=int, default=32,
+                    help="pad bucket (and prompt-length ceiling)")
+    ap.add_argument("--target-ns", type=int, default=None,
+                    help="NS for the cheapest-SLO question (default: the "
+                         "largest ladder cell actually run)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default=".")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.ladder = args.ladder or [1, 2]
+        args.repeats = args.repeats or 1
+        profiles = ([profile_by_key(k) for k in args.profiles]
+                    if args.profiles else list(smoke_grid_profiles()))
+    else:
+        args.ladder = args.ladder or [1, 4, 16]
+        args.repeats = args.repeats or 2
+        profiles = ([profile_by_key(k) for k in args.profiles]
+                    if args.profiles else list(paper_profiles()))
+        args.smoke = True   # configs stay CPU-sized; the grid is the knob
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    grid_path = os.path.join(args.out_dir, GRID_FILE)
+    drift_path = os.path.join(args.out_dir, DRIFT_FILE)
+
+    # the factory already compiles every batch shape; skip the runner's
+    # generic single-request warmup so scenarios start immediately
+    runner = ExperimentRunner(make_engine_factory(args), seed=args.seed,
+                              warmup=False)
+    records = runner.run_grid(profiles, build_scenarios(args),
+                              out_path=grid_path,
+                              progress=lambda msg: print(f"[run] {msg}",
+                                                         flush=True))
+    report = drift_report(records, target_ns=args.target_ns)
+    write_report(report, drift_path)
+    print(f"[out] {grid_path} ({len(records)} records)")
+    print(f"[out] {drift_path}")
+    print(format_drift(report))
+
+
+if __name__ == "__main__":
+    main()

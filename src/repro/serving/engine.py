@@ -132,6 +132,9 @@ class ServingEngine:
         self.timings: List[RequestTiming] = []    # v2 per-phase breakdowns
         self._stats = {"decode_segments": 0, "joins_mid_flight": 0,
                        "prefill_batches": 0}
+        # window() cursors: list lengths + counter values at the last snap
+        self._win_cursor = {"latencies": 0, "batch_sizes": 0, "timings": 0,
+                            "stats": dict(self._stats)}
         self._stop = threading.Event()
         # reentrant: a done-callback attached under the lock can fire
         # synchronously (future cancelled in the attach window) and re-enter
@@ -272,6 +275,31 @@ class ServingEngine:
                     self._enqueue_admitted(nxt)
                     return
             self._admission.release()
+
+    def warmup(self, batch_sizes=None, *, timeout: float = 600) -> None:
+        """Compile every batch shape a workload can hit, so jit compiles
+        land here instead of inside the first measured request.
+
+        Encoder and batch-at-a-time decoder modes serve one synthetic
+        batch per size in ``batch_sizes`` (default ``1..max_batch``)
+        through the serve path; the continuous decoder submits a full
+        ``max_batch`` burst (compiling the prefill join sizes the burst
+        forms plus the segment fn). Warmup requests count into the
+        cumulative ``metrics()`` — callers measuring afterwards should
+        attribute via ``window()``.
+        """
+        bucket = self.ec.pad_buckets[0]
+        tok = np.ones(min(8, bucket), np.int32)
+        if self.continuous_active:
+            handles = [self.generate(tok.copy())
+                       for _ in range(self.ec.max_batch)]
+            for h in handles:
+                h.result(timeout=timeout)
+            return
+        for b in batch_sizes or range(1, self.ec.max_batch + 1):
+            self._serve_batch([
+                _Request(tok.copy(), Future(), time.perf_counter())
+                for _ in range(b)])
 
     def close(self):
         self._stop.set()
@@ -505,6 +533,9 @@ class ServingEngine:
             out = self._encoder_fn(bucket)(self.params, jnp.asarray(toks),
                                            jnp.asarray(mask))
             out = jax.device_get(out)
+            # record samples BEFORE resolving futures: a client whose
+            # .result() returns must find its sample in metrics()/window()
+            self._record_batch(reqs)
             for i, r in enumerate(reqs):
                 r.future.set_result(jax.tree.map(lambda x: x[i], out))
         else:
@@ -512,26 +543,32 @@ class ServingEngine:
             gen, emits, eos_hit = self._serve_decoder(toks, lens, bucket,
                                                       reqs)
             t_done = time.perf_counter()
+            timings = []
+            for r in reqs:
+                timing = RequestTiming(queue_s=t_serve - r.t_submit,
+                                       prefill_s=0.0,
+                                       decode_s=t_done - t_serve)
+                timings.append(timing)
+                if r.handle is not None:
+                    self.timings.append(timing)
+            self._record_batch(reqs)
             for i, r in enumerate(reqs):
                 if r.handle is None:    # legacy raw-batch caller
                     r.future.set_result(gen[i])
                     continue
                 row = np.asarray(gen[i][emits[i]], np.int32)
-                timing = RequestTiming(queue_s=t_serve - r.t_submit,
-                                       prefill_s=0.0,
-                                       decode_s=t_done - t_serve)
-                self.timings.append(timing)
                 if r.handle.cancel_requested:  # cancel landed mid-serve
                     reason = FINISH_CANCELLED
                 else:
                     reason = FINISH_EOS if eos_hit[i] else FINISH_LENGTH
                 r.handle._push(row)
                 r.future.set_result(GenerationResult(
-                    tokens=row, finish_reason=reason, timing=timing,
+                    tokens=row, finish_reason=reason, timing=timings[i],
                     request_id=r.handle.request.request_id))
 
+    def _record_batch(self, reqs: List[_Request]) -> None:
         now = time.perf_counter()
-        self.batch_sizes.append(B)
+        self.batch_sizes.append(len(reqs))
         for r in reqs:
             self.latencies.append(now - r.t_submit)
 
@@ -559,33 +596,68 @@ class ServingEngine:
                         r.future.set_exception(e)
 
     # ------------------------------------------------------------ metrics
-    def metrics(self) -> dict:
-        """Aggregate serving stats. With no completed requests the latency
-        percentiles are None (never fabricated from a zero sample)."""
-        n = len(self.latencies)
+    def _aggregate(self, latencies, batch_sizes, timings, stats) -> dict:
+        """Reduce one span of serving samples to the metrics dict shape."""
+        n = len(latencies)
         m = {"requests": n}
         if n:
-            lat = np.array(self.latencies)
+            lat = np.array(latencies)
             m.update(latency_mean_s=float(lat.mean()),
                      latency_p50_s=float(np.percentile(lat, 50)),
                      latency_p95_s=float(np.percentile(lat, 95)))
         else:
             m.update(latency_mean_s=None, latency_p50_s=None,
                      latency_p95_s=None)
-        m["batch_size_mean"] = (float(np.mean(self.batch_sizes))
-                                if self.batch_sizes else 0.0)
-        if self.timings:
+        m["batch_size_mean"] = (float(np.mean(batch_sizes))
+                                if batch_sizes else 0.0)
+        if timings:
             m["queue_wait_mean_s"] = float(
-                np.mean([t.queue_s for t in self.timings]))
+                np.mean([t.queue_s for t in timings]))
             m["prefill_mean_s"] = float(
-                np.mean([t.prefill_s for t in self.timings]))
+                np.mean([t.prefill_s for t in timings]))
             m["decode_mean_s"] = float(
-                np.mean([t.decode_s for t in self.timings]))
+                np.mean([t.decode_s for t in timings]))
         if self.continuous_active:
             # batch_sizes holds per-segment occupancy in continuous mode
             m["batch_occupancy_mean"] = m["batch_size_mean"]
-            m.update(self._stats)
+            m.update(stats)
+        return m
+
+    def metrics(self) -> dict:
+        """Cumulative serving stats since engine start. With no completed
+        requests the latency percentiles are None (never fabricated from a
+        zero sample). ``window()`` gives the same shape for the span since
+        the previous ``window()`` call."""
+        m = self._aggregate(self.latencies, self.batch_sizes, self.timings,
+                            self._stats)
         if self._admission is not None:
             m["admission_peak_queue"] = self._admission.stats.queued_peak
             m["admission_wait_total_s"] = self._admission.stats.wait_total_s
+        return m
+
+    def window(self) -> dict:
+        """Snapshot-style metrics: everything since the previous
+        ``window()`` call (or engine start), then reset the window. Lets
+        the experiment runner attribute occupancy/join/segment counters to
+        one experiment window instead of cumulative totals. The worker
+        appends samples, so a concurrent append mid-call only shifts a
+        sample into the next window — never loses it. A cursor beyond the
+        current length means the caller cleared the sample lists
+        (``run_ladder(warmup=True)`` does): that window restarts at the
+        clear instead of silently skipping post-clear samples."""
+        cur = self._win_cursor
+        i_lat, i_bs, i_tim = (len(self.latencies), len(self.batch_sizes),
+                              len(self.timings))
+        stats_now = dict(self._stats)
+
+        def span(lst, start, stop):
+            return lst[start if start <= stop else 0:stop]
+
+        m = self._aggregate(span(self.latencies, cur["latencies"], i_lat),
+                            span(self.batch_sizes, cur["batch_sizes"], i_bs),
+                            span(self.timings, cur["timings"], i_tim),
+                            {k: v - cur["stats"][k]
+                             for k, v in stats_now.items()})
+        self._win_cursor = {"latencies": i_lat, "batch_sizes": i_bs,
+                            "timings": i_tim, "stats": stats_now}
         return m

@@ -1,0 +1,318 @@
+"""Deployment lab: profiles as single source of truth, telemetry
+summaries, experiment-record schema, measured-cost math, engine metric
+windows, and the smoke grid + drift report end to end."""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import costmodel, environments
+from repro.deploy import costs, profiles, report, runner, telemetry
+from repro.models import init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+
+# ---------------------------------------------------------------- profiles
+def test_profiles_are_the_single_source_of_truth():
+    """core.environments must re-export deploy.profiles records verbatim —
+    the spec/price duplication this PR removed must not come back."""
+    assert environments.Instance is profiles.EnvironmentProfile
+    assert list(environments.INSTANCES) == list(profiles.PROFILES)
+    for p in profiles.PROFILES:
+        assert environments.instance(p.provider, p.machine) is p
+    # the static cost model prices through the same records
+    assert environments.NS_LADDER == profiles.NS_LADDER
+    assert environments.LATENCY_SLO_S == profiles.LATENCY_SLO_S
+    assert environments.PROVIDERS == profiles.PROVIDERS
+    assert environments.MACHINES == profiles.MACHINES
+
+
+def test_profile_pricing_and_lookup():
+    p = profiles.profile("AWS", "C")
+    assert p.key == "AWS/C" and not p.is_gpu
+    assert p.hourly_cost_usd == pytest.approx(
+        p.monthly_cost_usd / profiles.HOURS_PER_MONTH)
+    assert profiles.profile_by_key("Azure/G").is_gpu
+    assert len(profiles.paper_profiles()) == 21
+    assert all(q.provider in profiles.PROVIDERS
+               for q in profiles.paper_profiles())
+    with pytest.raises(KeyError):
+        profiles.profile("AWS", "Z")
+    d = p.spec_dict()
+    assert d["hourly_cost_usd"] == p.hourly_cost_usd
+
+
+def test_costmodel_consistent_with_profile_hourly_price():
+    """$/1M from the static cost model == profile hourly price applied to
+    the paper's best SLO throughput (the consistency the refactor must
+    preserve)."""
+    cpm = costmodel.cost_per_million_sentences()
+    for prov in ("AWS", "GCP", "Azure"):
+        for m in "ABCDEFG":
+            ns = costmodel.max_ns_within_slo(prov, m)
+            if ns == 0:
+                assert cpm[prov][m] == float("inf")
+                continue
+            lat = environments.MEASURED[prov][m][ns][0]
+            expect = costs.usd_per_million_sentences(
+                ns / lat, profiles.profile(prov, m).hourly_cost_usd)
+            assert cpm[prov][m] == pytest.approx(expect, rel=1e-9)
+
+
+# --------------------------------------------------------------- telemetry
+def _tick(t, cpu, ram, cores=(), pgf=None):
+    return telemetry.TelemetrySample(t_s=t, cpu_pct=cpu, per_core_pct=cores,
+                                     ram_pct=ram, pgfaults_per_s=pgf)
+
+
+def test_timeline_summary_percentiles_synthetic():
+    tl = telemetry.TelemetryTimeline(tuple(
+        _tick(i * 0.1, float(i), 50.0 + i, cores=(float(i), 4 * float(i)))
+        for i in range(11)))                     # cpu 0..10, ram 50..60
+    s = tl.summary()
+    assert s["n_samples"] == 11
+    assert s["duration_s"] == pytest.approx(1.0)
+    assert s["cpu_pct"]["mean"] == pytest.approx(5.0)
+    assert s["cpu_pct"]["p50"] == pytest.approx(5.0)
+    assert s["cpu_pct"]["p95"] == pytest.approx(9.5)
+    assert s["cpu_pct"]["max"] == pytest.approx(10.0)
+    assert s["ram_spread_pct"] == pytest.approx(10.0)
+    assert s["core_count"] == 2
+    # core1 mean = 20, aggregate mean = 5 -> imbalance 15
+    assert s["hottest_core_mean_pct"] == pytest.approx(20.0)
+    assert s["core_imbalance_pct"] == pytest.approx(15.0)
+
+
+def test_timeline_summary_handles_absent_series():
+    tl = telemetry.TelemetryTimeline(tuple(
+        _tick(i * 0.1, None, None) for i in range(3)))
+    s = tl.summary()
+    assert s["cpu_pct"] is None and s["ram_pct"] is None
+    assert "ram_spread_pct" not in s
+    empty = telemetry.TelemetryTimeline(())
+    assert empty.summary()["n_samples"] == 0
+
+
+def test_sampler_windows_and_compat_shim():
+    import time
+    with telemetry.HardwareSampler(period_s=0.02) as hw:
+        time.sleep(0.15)
+        hw.mark()
+        first = hw.sample_now()
+        w = hw.window()
+    assert first is not None
+    assert len(w) >= 1                       # sample_now guarantees one
+    assert all(s.t_s >= 0 for s in w.samples)
+    # the loadtest-facing shim still exposes .samples / .mean
+    cs = telemetry.CpuSampler(period_s=0.02)
+    with cs:
+        time.sleep(0.1)
+    assert isinstance(cs.mean, float)
+    assert all(isinstance(v, float) for v in cs.samples)
+
+
+def test_loadtest_imports_telemetry_back():
+    """No duplicated /proc parsing: loadtest's sampler IS telemetry's."""
+    from repro.core import loadtest
+    assert loadtest.CpuSampler is telemetry.CpuSampler
+    assert loadtest.read_ram_pct is telemetry.read_ram_pct
+
+
+# ------------------------------------------------------------ cost algebra
+def test_measured_cost_math_known_numbers():
+    # 10 sentences/s at $0.36/h -> $1e-4/s / 10 per sentence = $1e-5
+    # -> $10 per 1M sentences
+    assert costs.usd_per_million_sentences(10.0, 0.36) == pytest.approx(10.0)
+    assert costs.usd_per_million_sentences(0.0, 1.0) == float("inf")
+
+
+def _fake_record(provider, machine, cells, kind="closed_ladder",
+                 host="h1"):
+    p = profiles.profile(provider, machine)
+    return {"schema_version": 1, "profile": p.spec_dict(),
+            "scenario": {"name": "t", "kind": kind, "mode": "encoder",
+                         "repeats": 1},
+            "engine": {"mode": "encoder"}, "cells": cells,
+            "telemetry": {"ram_spread_pct": 1.0}, "engine_window": {},
+            "wall_s": 1.0, "host": {"id": host}, "created_unix": 0.0}
+
+
+def _cell(ns, latency_s):
+    return {"ns": ns, "latency_s": latency_s, "latency_p95_s": latency_s,
+            "vcpu_pct": 50.0, "ram_pct": 40.0, "repeats": 1,
+            "sentences_per_s": ns / latency_s}
+
+
+def test_measured_cost_table_and_cheapest():
+    recs = [
+        _fake_record("AWS", "C", [_cell(1, 0.2), _cell(4, 0.4),
+                                  _cell(16, 4.0)]),     # best SLO: ns=4
+        _fake_record("AWS", "G", [_cell(1, 0.05), _cell(4, 0.1),
+                                  _cell(16, 0.4)]),     # meets SLO at 16
+    ]
+    table = costs.measured_cost_table(recs)
+    c = profiles.profile("AWS", "C")
+    assert table["AWS/C"]["best_ns"] == 4               # 10/s beats 5/s
+    assert table["AWS/C"]["usd_per_1m_sentences"] == pytest.approx(
+        costs.usd_per_million_sentences(10.0, c.hourly_cost_usd))
+    assert costs.measured_max_ns_within_slo(recs[0]["cells"]) == 4
+    # both meet SLO at ns>=4; C is cheaper per hour
+    assert costs.cheapest_slo_compliant(recs, target_ns=4) == "AWS/C"
+    # only G survives at ns>=16
+    assert costs.cheapest_slo_compliant(recs, target_ns=16) == "AWS/G"
+    prem = costs.gpu_vs_cpu_premium(recs)
+    g = profiles.profile("AWS", "G")
+    assert prem["price_ratio"] == pytest.approx(
+        g.hourly_cost_usd / c.hourly_cost_usd)
+    assert prem["n_cpu_profiles"] == 1 and prem["n_gpu_profiles"] == 1
+    assert prem["cost_per_sentence_ratio"] is not None
+
+
+def test_profile_never_meeting_slo_priced_infinite():
+    recs = [_fake_record("AWS", "A", [_cell(1, 5.0)])]
+    table = costs.measured_cost_table(recs)
+    assert table["AWS/A"]["usd_per_1m_sentences"] == float("inf")
+    assert table["AWS/A"]["best_ns"] is None
+    assert costs.cheapest_slo_compliant(recs, target_ns=1) is None
+
+
+# ----------------------------------------------------------- engine window
+def test_engine_window_attributes_counters_to_spans():
+    cfg = get_config("gector-base", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(mode="encoder", max_batch=4,
+                                     pad_buckets=(32,)))
+    try:
+        sents = [np.random.randint(0, cfg.vocab_size, (12,))
+                 for _ in range(8)]
+        for s in sents[:3]:
+            eng.submit(s).result(timeout=300)
+        w1 = eng.window()
+        assert w1["requests"] == 3
+        assert w1["latency_p95_s"] is not None
+        for s in sents[3:8]:
+            eng.submit(s).result(timeout=300)
+        w2 = eng.window()
+        assert w2["requests"] == 5                  # only the new span
+        assert eng.metrics()["requests"] == 8       # cumulative unchanged
+        w3 = eng.window()
+        assert w3["requests"] == 0
+        assert w3["latency_p95_s"] is None          # never fabricated
+    finally:
+        eng.close()
+
+
+def test_engine_window_diffs_continuous_counters():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        mode="decoder", max_batch=2, max_new_tokens=4, pad_buckets=(16,),
+        decode_segment=2))
+    try:
+        eng.generate(np.arange(5) % cfg.vocab_size).result(timeout=600)
+        w1 = eng.window()
+        assert w1["decode_segments"] >= 1
+        assert w1["prefill_batches"] >= 1
+        w2 = eng.window()
+        assert w2["decode_segments"] == 0           # counters diffed
+        assert w2["prefill_batches"] == 0
+        # cumulative metrics still carry the totals
+        assert eng.metrics()["decode_segments"] >= w1["decode_segments"]
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------- staggered phase split
+def test_staggered_result_surfaces_timing_split():
+    from repro.core.loadtest import run_staggered
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        mode="decoder", max_batch=2, max_new_tokens=4, pad_buckets=(16,)))
+    try:
+        prompts = [np.arange(4 + i) % cfg.vocab_size for i in range(3)]
+        r = run_staggered(eng, prompts, gap_s=0.01,
+                          sampling=SamplingParams(max_new_tokens=2))
+    finally:
+        eng.close()
+    assert r.n_requests == 3
+    assert r.queue_mean_s >= 0 and r.prefill_mean_s >= 0
+    assert r.decode_mean_s >= 0 and r.queue_p95_s >= r.queue_mean_s * 0.0
+    # split must be consistent with the end-to-end percentiles it refines
+    assert (r.queue_mean_s + r.prefill_mean_s + r.decode_mean_s
+            <= r.latency_p95_s * 3 + 1e-6)
+
+
+# ------------------------------------------------------- grid + drift smoke
+def _encoder_factory(scenario):
+    cfg = get_config("gector-base", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(mode="encoder", max_batch=4,
+                                     pad_buckets=(32,)))
+    eng.warmup()          # the public compile-priming entry point
+    rng = np.random.RandomState(0)
+    sents = [rng.randint(0, cfg.vocab_size, (16,)) for _ in range(32)]
+    return eng, sents, None
+
+
+def test_smoke_grid_records_schema_and_drift_report(tmp_path):
+    scenario = runner.WorkloadScenario(name="smoke", ladder=(1, 2),
+                                       repeats=1)
+    grid = runner.ExperimentRunner(_encoder_factory)
+    out = tmp_path / "grid.jsonl"
+    records = grid.run_grid(list(runner.smoke_grid_profiles()), [scenario],
+                            out_path=str(out))
+    assert len(records) == 2                      # 2 profiles x 1 scenario
+
+    # --- JSONL round-trip + schema -----------------------------------
+    rows = runner.read_jsonl(str(out))
+    assert len(rows) == 2
+    for row in rows:
+        assert set(runner.RECORD_FIELDS) <= set(row)
+        assert row["schema_version"] == runner.SCHEMA_VERSION
+        assert row["scenario"]["kind"] == "closed_ladder"
+        assert [c["ns"] for c in row["cells"]] == [1, 2]
+        for c in row["cells"]:
+            assert c["latency_s"] > 0
+            assert c["sentences_per_s"] == pytest.approx(
+                c["ns"] / c["latency_s"])
+        assert row["telemetry"]["n_samples"] >= 1
+        assert "requests" in row["engine_window"]
+        assert row["engine_window"]["requests"] >= scenario.repeats
+        json.dumps(row)                           # JSON-serializable
+
+    # --- drift report ------------------------------------------------
+    rep = report.drift_report(rows)
+    assert rep["n_records"] == 2
+    assert rep["profiles"] == ["AWS/C", "AWS/G"]
+    # every paper finding is listed with its paper verdict
+    assert set(report.PAPER_FINDINGS) == set(rep["findings"])
+    for d in rep["findings"].values():
+        assert isinstance(d["paper_holds"], bool)
+        assert "status" in d["measured"]
+    # the three acceptance quantities are present and diffed
+    cpm = rep["cost_per_million_sentences"]
+    assert set(cpm) == {"AWS/C", "AWS/G"}
+    for d in cpm.values():
+        assert d["paper_usd_per_1m"] is not None
+        assert (d["measured_usd_per_1m"] == float("inf")
+                or d["measured_usd_per_1m"] > 0)
+    ch = rep["cheapest_slo_compliant"]
+    assert ch["target_ns"] == 2                   # largest cell in grid
+    assert "measured" in ch and "paper_among_grid_profiles" in ch
+    prem = rep["gpu_vs_cpu_premium"]
+    assert prem["paper_table5_ratio_overall"] == pytest.approx(
+        costmodel.gpu_cost_premium()["overall"])
+    assert prem["grid_price_ratio"] == pytest.approx(
+        profiles.profile("AWS", "G").hourly_cost_usd
+        / profiles.profile("AWS", "C").hourly_cost_usd)
+    # the formatter renders without crashing and names every finding
+    text = report.format_drift(rep)
+    for name in report.PAPER_FINDINGS:
+        assert name in text
+    assert not math.isnan(prem["paper_table5_ratio_overall"])
