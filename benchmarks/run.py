@@ -331,6 +331,84 @@ def bench_continuous_batching() -> list:
     return rows
 
 
+def bench_multi_bucket() -> list:
+    """Mixed-bucket staggered arrivals: per-request p95 latency with
+    per-bucket lanes vs the legacy single-set scheduler at the same
+    offered load. The workload is the shape the paper's corpus has —
+    a stream of short interactive requests (bucket 32) with occasional
+    long-decode requests in another bucket (16). The single-set baseline
+    recreates the cross-bucket head-of-line cliff: every interactive
+    request arriving during a long decode waits for that set to drain,
+    so the interactive tail inflates to the long request's service time;
+    lanes admit them into their own bucket's free slots immediately. The
+    long requests themselves decode slower under lanes (their segments
+    round-robin with the busy interactive lane — the fixed-width-segment
+    occupancy trade the ROADMAP tracks), which is why p95 is taken over
+    the workload including the interactive tail, not the max. derived =
+    p95 + throughput; the lanes row also reports its p95 speedup."""
+    import jax
+    from repro.configs import get_config
+    from repro.core.loadtest import run_staggered
+    from repro.models import init_params
+    from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    MB, BUCKETS = 4, (16, 32)
+    T = 24 if SMOKE else 64              # long-request budget (the hog)
+    n_req = 12 if SMOKE else 40
+    hog_every = n_req // 2 if SMOKE else 20
+    rng = np.random.default_rng(7)
+    prompts, sampling = [], []
+    for i in range(n_req):
+        if i % hog_every == hog_every // 2:   # rare long decode, bucket 16
+            prompts.append(rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(4, 17)),)))
+            sampling.append(SamplingParams(max_new_tokens=T))
+        else:                                 # interactive, bucket 32
+            prompts.append(rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(17, 33)),)))
+            sampling.append(SamplingParams(max_new_tokens=4))
+
+    def measure(multi_lane, gap_s=None):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            mode="decoder", max_batch=MB, max_new_tokens=T,
+            pad_buckets=BUCKETS, decode_segment=4, multi_lane=multi_lane))
+        try:
+            eng.warmup()     # every bucket: join sizes + segments
+            serve = [eng.generate(prompts[0],
+                                  SamplingParams(max_new_tokens=4)).result(
+                timeout=600).timing.total_s for _ in range(3)]
+            if gap_s is None:
+                # one interactive arrival per interactive service time:
+                # the regime where a long decode in the other bucket
+                # otherwise traps a train of interactive requests
+                gap_s = float(np.median(serve))
+            best = None
+            for _ in range(3):               # best-of-3 vs host noise
+                eng.latencies.clear()
+                eng.batch_sizes.clear()
+                eng.timings.clear()
+                r = run_staggered(eng, prompts, gap_s=gap_s,
+                                  sampling=sampling)
+                if best is None or r.latency_p95_s < best.latency_p95_s:
+                    best = r
+        finally:
+            eng.close()
+        return best, gap_s
+
+    single, gap = measure(False)         # the same offered load for both
+    lanes, _ = measure(True, gap_s=gap)
+    return [("multi_bucket_single", single.wall_s * 1e6,
+             f"p95={single.latency_p95_s:.3f}s;"
+             f"tok_s={single.tokens_per_s:.1f}"),
+            ("multi_bucket_lanes", lanes.wall_s * 1e6,
+             f"p95={lanes.latency_p95_s:.3f}s;"
+             f"tok_s={lanes.tokens_per_s:.1f};"
+             f"p95_speedup="
+             f"{single.latency_p95_s / lanes.latency_p95_s:.2f}x")]
+
+
 def bench_deploy_lab() -> list:
     """Deployment-lab harness: one profile x one ladder scenario through
     ExperimentRunner + drift_report. us_per_call times the whole grid;
@@ -397,6 +475,7 @@ ALL = {
     "engine": bench_engine_ladder,
     "decode_hotpath": bench_decode_hotpath,
     "continuous_batching": bench_continuous_batching,
+    "multi_bucket": bench_multi_bucket,
     "deploy_lab": bench_deploy_lab,
     "roofline": bench_roofline_summary,
 }

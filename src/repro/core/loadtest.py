@@ -44,6 +44,9 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
         engine.submit(sentences[0]).result(timeout=600)
         engine.latencies.clear()
         engine.batch_sizes.clear()
+        # timings too: cumulative metrics() phase means (queue/prefill/
+        # decode) would otherwise still include the compile-laden warmup
+        engine.timings.clear()
         # re-sync the engine's window() cursors with the truncated lists
         # (a stale cursor would silently hide post-clear samples)
         win = getattr(engine, "window", None)
@@ -66,6 +69,25 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
                               vcpu_pct=cpu.mean, ram_pct=_ram_pct(),
                               repeats=repeats))
     return cells
+
+
+def mixed_bucket_prompts(buckets: Sequence[int], n: int, vocab_size: int, *,
+                         rng_seed: int = 0, min_len: int = 3) -> List:
+    """Prompt pool spanning every pad bucket: prompt i pads to
+    ``buckets[i % len(buckets)]`` (its length drawn from that bucket's
+    exclusive band), so consecutive staggered arrivals alternate buckets —
+    the mixed-length traffic shape the paper's corpus actually has, and
+    the workload where multi-lane scheduling removes the cross-bucket
+    head-of-line wait the single-set scheduler pays."""
+    buckets = sorted(buckets)
+    rng = np.random.default_rng(rng_seed)
+    prompts = []
+    for i in range(n):
+        j = i % len(buckets)
+        lo = buckets[j - 1] + 1 if j else min(min_len, buckets[0])
+        prompts.append(rng.integers(0, vocab_size,
+                                    (int(rng.integers(lo, buckets[j] + 1)),)))
+    return prompts
 
 
 @dataclasses.dataclass

@@ -161,8 +161,11 @@ class ExperimentRunner:
         for scenario in scenarios:
             engine, sentences, sampling = self.engine_factory(scenario)
             try:
-                if self.warmup:  # pay jit compile outside every window
-                    engine.submit(sentences[0]).result(timeout=600)
+                if self.warmup:  # pay jit compile outside every window —
+                    # every bucket and batch size, not just the first
+                    # request's shape (a mixed-bucket scenario would
+                    # otherwise compile mid-measurement)
+                    engine.warmup()
                 with HardwareSampler(self.telemetry_period_s) as hw:
                     for i, prof in enumerate(profiles):
                         if progress:

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core.loadtest import mixed_bucket_prompts
 from repro.deploy.profiles import paper_profiles, profile_by_key
 from repro.deploy.report import drift_report, format_drift, write_report
 from repro.deploy.runner import (KIND_LADDER, KIND_STAGGERED,
@@ -44,22 +45,33 @@ def make_engine_factory(args):
     the serving path every scaling PR touches.
     """
     def factory(scenario: WorkloadScenario):
-        arch = "gector-base" if scenario.mode == "encoder" else args.arch
+        decoder = scenario.mode == "decoder"
+        arch = args.arch if decoder else "gector-base"
         cfg = get_config(arch, smoke=args.smoke)
         params = init_params(cfg, jax.random.PRNGKey(0))
+        # decoder scenarios serve the mixed-length traffic the paper's
+        # corpus actually has: prompts alternating two pad buckets through
+        # the multi-lane scheduler, long prompts prefilling in chunks
+        buckets = ((args.bucket // 2, args.bucket) if decoder
+                   else (args.bucket,))
         eng = ServingEngine(cfg, params, EngineConfig(
             mode=scenario.mode, max_batch=args.max_batch,
-            pad_buckets=(args.bucket,),
+            pad_buckets=buckets,
             max_new_tokens=scenario.max_new_tokens,
-            max_inflight=args.max_inflight))
-        rng = np.random.default_rng(args.seed)
-        sentences = [rng.integers(0, cfg.vocab_size,
-                                  (int(rng.integers(8, args.bucket // 2
-                                                    + 8)),))
-                     for _ in range(64)]
-        # compile every batch shape here, not inside the first profile's
-        # measured window (the grid's first row would otherwise carry
-        # seconds of compile latency the later rows don't)
+            max_inflight=args.max_inflight,
+            prefill_chunk=max(args.bucket // 4, 8) if decoder else None))
+        if decoder:
+            sentences = mixed_bucket_prompts(buckets, 64, cfg.vocab_size,
+                                             rng_seed=args.seed)
+        else:
+            rng = np.random.default_rng(args.seed)
+            sentences = [rng.integers(0, cfg.vocab_size,
+                                      (int(rng.integers(8, args.bucket // 2
+                                                        + 8)),))
+                         for _ in range(64)]
+        # compile every batch and bucket shape here, not inside the first
+        # profile's measured window (the grid's first row would otherwise
+        # carry seconds of compile latency the later rows don't)
         eng.warmup()
         sampling = (SamplingParams(max_new_tokens=scenario.max_new_tokens)
                     if scenario.mode == "decoder" else None)

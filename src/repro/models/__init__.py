@@ -2,4 +2,5 @@ from repro.models.config import (AttnConfig, ModelConfig, MoEConfig,  # noqa
                                  ShapeConfig, SHAPES)
 from repro.models.transformer import (decode_loop, decode_segment,  # noqa
                                       decode_step, forward, init_params,
-                                      make_caches, prefill, sample_logits)
+                                      make_caches, prefill, prefill_chunk,
+                                      sample_logits)

@@ -267,6 +267,42 @@ def attn_decode(cfg, p, x, positions, cache, *, window=None):
     return shard_activation(o, "batch", None, None), new_cache
 
 
+def attn_prefill_chunk(cfg, p, x, positions, cache, *, window=None):
+    """One chunk of an incremental prefill — the S>1 generalization of
+    ``attn_decode`` that chunked prefill interleaves between decode
+    segments.
+
+    Unlike ``attn_apply`` (which assumes the cache is empty and writes the
+    sequence at cache indices 0..S-1), the chunk's queries attend over the
+    *cached prefix plus the chunk itself*, and the chunk's KV is then
+    written at its absolute positions (ring semantics, ``pos % L``). Stale
+    ring entries sharing a slot with the chunk carry positions at least a
+    full window older than any query, so the window mask already excludes
+    them; empty slots carry the pos = -1 sentinel and are masked the same
+    way. x: (B, S, d); positions: (B, S) absolute; returns (out, cache).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    L = cache["k"].shape[1]
+    kv_k = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
+    kv_v = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+    kv_pos = jnp.concatenate([cache["pos"], positions], axis=1)
+    out = naive_attention(q, kv_k, kv_v, positions, kv_pos, causal=True,
+                          window=window, softcap=cfg.attn.logit_softcap)
+    if S >= L:  # ring: only the chunk's last L positions survive the write
+        k, v, positions = k[:, S - L:], v[:, S - L:], positions[:, S - L:]
+    slots = positions % L
+    bidx = jnp.arange(B)[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slots].set(positions),
+        "len": cache["len"] + S,
+    }
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard_activation(o, "batch", None, None), new_cache
+
+
 def cross_attn_apply(cfg, p, x, enc_kv):
     """Cross-attention (whisper decoder). enc_kv = (k, v) precomputed from
     encoder output: (B, T, Hkv, D) each."""

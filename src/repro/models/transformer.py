@@ -140,6 +140,10 @@ def _apply_block(cfg, kind, p, x, positions, cache, *, mode, causal,
         if mode == "decode":
             a, cache = attn_mod.attn_decode(cfg, p["attn"], h, positions,
                                             cache, window=window)
+        elif mode == "chunk":
+            a, cache = attn_mod.attn_prefill_chunk(cfg, p["attn"], h,
+                                                   positions, cache,
+                                                   window=window)
         else:
             if not causal:
                 q, k, v = attn_mod._project_qkv(cfg, p["attn"], h, positions)
@@ -206,7 +210,10 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
             unroll_periods: Optional[bool] = None):
     """Run the model.
 
-    mode: 'full' (train/prefill) or 'decode' (single step with caches).
+    mode: 'full' (train/prefill from an empty cache), 'decode' (single step
+    with caches), or 'chunk' (incremental prefill continuation: attend over
+    the cached prefix + this chunk, then extend the caches at the chunk's
+    absolute ``positions`` — recurrent states simply carry across chunks).
     unroll_periods: None = auto (unroll the period stack for single-token
     decode when ``n_periods`` is small — the scan's per-iteration
     dynamic-slice machinery costs more than the whole step body at S=1;
@@ -318,6 +325,24 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
 def prefill(cfg, params, tokens, caches, **kw):
     return forward(cfg, params, tokens=tokens, caches=caches, mode="full",
                    **kw)
+
+
+def prefill_chunk(cfg, params, tokens, positions, caches, *, long_ctx=False):
+    """One chunk of an incremental prefill (chunked prefill's model core).
+
+    tokens: (B, C) the next C prompt tokens per row; positions: (B, C)
+    their absolute positions (chunk k of a prompt covers positions
+    kC..kC+C-1). The chunk attends over everything already in ``caches``
+    plus itself and writes its KV at those positions, so running a prompt
+    through consecutive chunks is equivalent to one whole-prompt prefill —
+    but each call only stalls in-flight decode for a chunk, not the whole
+    prompt. All chunks except a prompt's last must be completely filled
+    with real tokens (padding mid-prompt would write garbage KV below live
+    positions); the last chunk may carry a padded tail, which lands beyond
+    the prompt exactly like whole-prompt prefill padding does.
+    """
+    return forward(cfg, params, tokens=tokens, positions=positions,
+                   caches=caches, mode="chunk", long_ctx=long_ctx)
 
 
 def decode_step(cfg, params, tokens, positions, caches, *, long_ctx=False,

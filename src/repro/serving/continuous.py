@@ -1,58 +1,104 @@
-"""Step-driven continuous-batching scheduler — the decoder worker that
-closes the ROADMAP's "continuous batching at step granularity" item.
+"""Multi-lane step-driven continuous-batching scheduler.
 
-The batch-at-a-time worker serves a batch start-to-finish: a request
-arriving one step after a batch launches waits the batch's whole decode
-(the head-of-line blowup behind the paper's Tables 2-4 latency cliff).
-This scheduler instead drives decode in short jitted scan segments
-(``EngineConfig.decode_segment`` steps of ``models.decode_segment``) over a
-fixed batch of ``CachePool`` slots, and between segments — a host sync it
-needs anyway to stream tokens — it:
+The single-set predecessor closed the ROADMAP's "continuous batching at
+step granularity" item but kept two head-of-line cliffs it opened:
+
+  * **cross-bucket blocking** — all in-flight rows shared one pad bucket,
+    so a request padding to a different bucket waited for the entire set
+    to drain (and ``_admit`` re-scanned the whole pending heap every
+    segment while those foreign-bucket requests sat in it);
+  * **prefill stalls** — a join's prefill ran its whole prompt in one
+    call between segments, stalling every in-flight row for the full
+    prompt's forward.
+
+This scheduler fixes both. Each pad bucket gets its own **lane** — a
+``CachePool``-backed slot batch with per-slot decode state, occupancy
+counters, and a per-lane pending queue (``scheduler.LaneQueue``: O(log n)
+lane-aware pop, no cross-bucket rescans) — and the worker round-robins
+jitted decode segments (``models.decode_segment``) across non-empty lanes,
+so a bucket-64 request admits into free bucket-64 slots immediately while
+the bucket-32 set keeps decoding. Between a lane's segments (a host sync
+it needs anyway to stream tokens) the worker:
 
   * retires rows that finished in-graph (per-row eos / budget stop),
-    releasing their pool slot and resolving their future with a
-    ``GenerationResult`` (finish_reason + queue/prefill/decode timing);
-  * retires rows whose client cancelled mid-decode;
-  * admits the best pending requests (priority order, FIFO within a
-    level) into free slots via prefill-into-slot: one jitted prefill fills
-    the new rows' KV straight into the pool (``CachePool.write_back``) and
-    selects their first token, after which they ride the same segments as
-    the rows already in flight.
+    releasing their slot and resolving their future;
+  * retires rows whose client cancelled mid-decode (or mid-prefill);
+  * admits the best pending requests per lane (priority order, FIFO
+    within a level) via prefill-into-slot;
+  * advances **chunked prefills**: a join whose prompt exceeds
+    ``EngineConfig.prefill_chunk`` prefills ``models.prefill_chunk``-sized
+    chunks into a staging pool slot — one chunk per scheduler turn,
+    interleaved with decode segments — and is copied into its reserved
+    lane slot (one chunk-granular ``CachePool.write_back``) when the
+    prompt completes, so a 512-token join no longer stalls every in-flight
+    row for the whole prompt's prefill. The staging slot (not the live
+    lane slot) absorbs the chunks because inactive rows idempotently
+    re-write their frozen KV every segment — a partially filled live slot
+    would be corrupted between chunks.
 
-Rows in one in-flight set share a pad bucket (one pool / one compiled
-segment shape); when the set drains, the next bucket is chosen from the
-best pending request. Inactive slots cost compute (the segment always runs
-the full slot batch — static shapes keep it one compiled function) but re-
-write their frozen KV slot idempotently, so correctness never depends on
-occupancy. Per-segment occupancy lands in ``engine.batch_sizes`` and the
-join/segment counters in ``engine.metrics()``.
+``EngineConfig.multi_lane=False`` keeps the legacy single-set admission
+gate (one bucket serves until it drains) for A/B runs — the
+``bench_multi_bucket`` baseline. Inactive slots still cost compute (each
+lane's segment runs its full slot batch; static shapes keep it one
+compiled function per bucket) but correctness never depends on occupancy.
+Per-segment occupancy lands in ``engine.batch_sizes`` and per-lane
+segment/occupancy/join/chunk counters in ``engine.metrics()['lanes']``.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationResult, RequestTiming)
-from repro.serving.scheduler import RequestQueue
+from repro.serving.kvcache import CachePool
+from repro.serving.scheduler import LaneQueue
 
 
-@dataclasses.dataclass
-class _Row:
-    req: "object"                    # engine._Request
+@dataclasses.dataclass(eq=False)     # identity semantics: list.remove /
+class _Row:                          # membership must not compare the
+    req: "object"                    # engine._Request (np token arrays)
     slot: int
     toks: List[int] = dataclasses.field(default_factory=list)
 
 
-class ContinuousScheduler:
-    def __init__(self, engine):
-        self.eng = engine
-        n = engine.ec.max_batch
+@dataclasses.dataclass(eq=False)
+class _Fill:
+    """A join whose prompt is prefilling chunk-by-chunk: ``slot`` is its
+    reserved lane slot (written once, when the prompt completes), ``stg``
+    its staging-pool slot (written every chunk), ``filled`` the prompt
+    tokens staged so far. Sampling/stop arrays are frozen at claim time so
+    chunk batches regroup freely across scheduler turns."""
+    req: "object"
+    slot: int
+    stg: int
+    filled: int = 0
+    temp: float = 0.0
+    topk: int = 0
+    seed: int = 0
+    eos: int = -1
+    budget: int = 0
+
+
+class _Lane:
+    """One pad bucket's in-flight set: pool slots + per-slot decode state.
+
+    State arrays are indexed by pool slot; free and prefilling slots ride
+    along inactive (``active=False``) in every segment, idempotently
+    re-writing their frozen KV position — correctness never depends on
+    occupancy, and reset-on-assign wipes a slot when it is re-acquired.
+    """
+
+    def __init__(self, eng, bucket: int):
+        self.bucket = bucket
+        self.pool: CachePool = eng._get_pool(bucket)
+        self.staging: Optional[CachePool] = None   # lazily, on first chunk
+        n = eng.ec.max_batch
         self.last_tok = np.zeros(n, np.int32)   # token each row just made
         self.pos = np.zeros(n, np.int32)        # its absolute position
         self.active = np.zeros(n, bool)
@@ -61,9 +107,33 @@ class ContinuousScheduler:
         self.temp = np.zeros(n, np.float32)
         self.topk = np.zeros(n, np.int32)
         self.seed = np.zeros(n, np.int32)
-        self.rows = {}                          # slot -> _Row
-        self.bucket: Optional[int] = None       # in-flight set's pad bucket
-        self.pending = RequestQueue()
+        self.rows: Dict[int, _Row] = {}         # slot -> _Row (decoding)
+        self.fills: List[_Fill] = []            # chunked prefills in flight
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.rows or self.fills)
+
+    def get_staging(self, eng) -> CachePool:
+        if self.staging is None:
+            self.staging = CachePool(
+                eng.cfg, eng.ec.max_batch,
+                self.bucket + eng.ec.max_new_tokens, dtype=jnp.float32)
+        return self.staging
+
+
+class ContinuousScheduler:
+    def __init__(self, engine):
+        self.eng = engine
+        self.lanes: Dict[int, _Lane] = {}       # bucket -> lane
+        self.pending = LaneQueue()              # per-bucket pending queues
+        self._rr = 0                            # round-robin cursor
+
+    def _lane(self, bucket: int) -> _Lane:
+        lane = self.lanes.get(bucket)
+        if lane is None:
+            lane = self.lanes[bucket] = _Lane(self.eng, bucket)
+        return lane
 
     # ------------------------------------------------------------ worker
     def run(self):
@@ -71,26 +141,49 @@ class ContinuousScheduler:
         try:
             while not eng._stop.is_set():
                 try:
-                    self._drain(block=not self.rows and not self.pending)
+                    idle = not self.pending and not any(
+                        l.busy for l in self.lanes.values())
+                    self._drain(block=idle)
                     self._admit()
-                    if self.rows:
-                        self._segment()
+                    lane = self._next_lane()
+                    if lane is not None:
+                        self._step(lane)
                 except Exception as e:  # surfaced to the affected clients
                     self._fail_inflight(e)
         finally:
             self._shutdown()
 
     def _drain(self, block: bool) -> None:
-        """Move newly submitted requests into the priority-pending set;
+        """Move newly submitted requests into their lane's pending queue;
         when idle, block briefly so the loop doesn't spin."""
+        eng = self.eng
         try:
             while True:
-                req = (self.eng._q.get(timeout=0.05) if block
-                       else self.eng._q.get_nowait())
+                req = (eng._q.get(timeout=0.05) if block
+                       else eng._q.get_nowait())
                 block = False
-                self.pending.push(req, req.priority)
+                self.pending.push(req, req.priority,
+                                  lane=eng._bucket(len(req.tokens)))
         except queue.Empty:
             pass
+
+    def _next_lane(self) -> Optional[_Lane]:
+        """Round-robin over lanes with in-flight work, so no bucket's
+        decode starves while another bucket is busy."""
+        busy = [l for l in self.lanes.values() if l.busy]
+        if not busy:
+            return None
+        self._rr = (self._rr + 1) % len(busy)
+        return busy[self._rr]
+
+    def _step(self, lane: _Lane) -> None:
+        """One scheduler turn for a lane: advance its chunked prefills by
+        one chunk, then run one decode segment for its in-flight rows —
+        the interleave that bounds how long a join can stall decode."""
+        if lane.fills:
+            self._fill_chunk(lane)
+        if lane.rows:
+            self._segment(lane)
 
     # --------------------------------------------------------- admission
     def _admit(self) -> None:
@@ -98,52 +191,70 @@ class ContinuousScheduler:
         if not self.pending:
             return
         drop = lambda r: r.future.done()    # noqa: E731 — cancelled in queue
-        claimed = []
-        if not self.rows:
-            # set drained: the best pending request picks the next bucket
-            first = self.pending.pop(drop=drop)
-            if first is None:
-                return
-            self.bucket = eng._bucket(len(first.tokens))
-            claimed.append(first)
-        pool = eng._get_pool(self.bucket)
-        in_bucket = lambda r: eng._bucket(len(r.tokens)) == self.bucket  # noqa: E731
-        while pool.free_slots > len(claimed):
-            r = self.pending.pop(pred=in_bucket, drop=drop)
-            if r is None:
-                break
-            claimed.append(r)
-        claimed = [r for r in claimed
-                   if r.future.set_running_or_notify_cancel()]
-        if not claimed:
-            return
-        if self.rows:
-            eng._stats["joins_mid_flight"] += len(claimed)
-        self._prefill(claimed, pool)
+        if eng.ec.multi_lane:
+            buckets = self.pending.lanes()
+        else:
+            # legacy single-set gate (A/B baseline): one bucket serves
+            # until it fully drains; the next is picked by the globally
+            # best pending request — the head-of-line cliff lanes remove
+            busy = [b for b, l in self.lanes.items() if l.busy]
+            if busy:
+                buckets = [b for b in busy if self.pending.lane_len(b)]
+            else:
+                best = self.pending.best_lane(drop)
+                buckets = [] if best is None else [best]
+        any_busy = any(l.busy for l in self.lanes.values())
+        for bucket in buckets:
+            lane = self._lane(bucket)
+            claimed = []
+            while lane.pool.free_slots > len(claimed):
+                r = self.pending.pop(bucket, drop=drop)
+                if r is None:
+                    break
+                claimed.append(r)
+            claimed = [r for r in claimed
+                       if r.future.set_running_or_notify_cancel()]
+            if not claimed:
+                continue
+            if any_busy:
+                eng._stats["joins_mid_flight"] += len(claimed)
+                eng._lane_stat(bucket)["joins"] += len(claimed)
+            any_busy = True
+            chunk = eng.ec.prefill_chunk
+            whole = [r for r in claimed
+                     if chunk is None or len(r.tokens) <= chunk]
+            fills = [r for r in claimed
+                     if not (chunk is None or len(r.tokens) <= chunk)]
+            if whole:
+                self._prefill(whole, lane)
+            if fills:
+                self._begin_fills(fills, lane)
 
-    def _prefill(self, claimed, pool) -> None:
+    # ----------------------------------------------- whole-prompt prefill
+    def _prefill(self, claimed, lane: _Lane) -> None:
         """Prefill-into-slot: fill the new rows' KV straight into pool
         slots and emit their first token; they join the in-flight set for
         the next segment. A failure anywhere (compile error, pool
         exhaustion, ...) must not strand the claimed requests — their
-        futures are already RUNNING and outside self.rows, so run()'s
+        futures are already RUNNING and outside lane.rows, so run()'s
         _fail_inflight can't see them: fail them here and release any
         slots that never became rows, then keep serving."""
         try:
-            self._prefill_inner(claimed, pool)
+            self._prefill_inner(claimed, lane)
         except Exception as e:
-            live = {id(row.req) for row in self.rows.values()}
-            for slot, rid in enumerate(pool.request_of):
-                if rid in {id(r) for r in claimed} and slot not in self.rows:
-                    pool.release(slot)
+            live = {id(row.req) for row in lane.rows.values()}
+            ids = {id(r) for r in claimed}
+            for slot, rid in enumerate(lane.pool.request_of):
+                if rid in ids and slot not in lane.rows:
+                    lane.pool.release(slot)
             for r in claimed:
                 if id(r) not in live and not r.future.done():
                     r.future.set_exception(e)
 
-    def _prefill_inner(self, claimed, pool) -> None:
+    def _prefill_inner(self, claimed, lane: _Lane) -> None:
         eng = self.eng
         t0 = time.perf_counter()
-        B, bucket = len(claimed), self.bucket
+        B, bucket, pool = len(claimed), lane.bucket, lane.pool
         # gather acquire: one compiled variant per join size, not per slot
         # run position (joins land at arbitrary offsets mid-serve)
         slots, view = pool.acquire([id(r) for r in claimed], gather=True)
@@ -165,79 +276,219 @@ class ContinuousScheduler:
         t1 = time.perf_counter()
         for i, (r, s) in enumerate(zip(claimed, slots)):
             r.t_prefill_done = t1
-            tok = int(first[i])
-            row = _Row(req=r, slot=s, toks=[tok])
-            self.rows[s] = row
-            r.handle._push([tok])
-            self.last_tok[s] = tok
-            self.pos[s] = lens[i]           # first token sits at len(prompt)
-            self.budget[s] = budget[i] - 1  # the first token spent one
-            self.eos[s], self.temp[s] = eos[i], temp[i]
-            self.topk[s], self.seed[s] = topk[i], seed[i]
-            hit = eos[i] >= 0 and tok == eos[i]
-            if hit or self.budget[s] <= 0:
-                self._finish(row, FINISH_EOS if hit else FINISH_LENGTH, t1)
-            else:
-                self.active[s] = True
+            self._start_row(lane, r, s, int(first[i]), int(lens[i]),
+                            budget=int(budget[i]), eos=int(eos[i]),
+                            temp=float(temp[i]), topk=int(topk[i]),
+                            seed=int(seed[i]), now=t1)
+
+    def _start_row(self, lane: _Lane, r, slot: int, tok: int, plen: int, *,
+                   budget: int, eos: int, temp: float, topk: int, seed: int,
+                   now: float) -> None:
+        """Install a freshly prefilled request as an in-flight decode row
+        (its first token already selected at the prompt's last position)."""
+        row = _Row(req=r, slot=slot, toks=[tok])
+        lane.rows[slot] = row
+        r.handle._push([tok])
+        lane.last_tok[slot] = tok
+        lane.pos[slot] = plen           # first token sits at len(prompt)
+        lane.budget[slot] = budget - 1  # the first token spent one
+        lane.eos[slot], lane.temp[slot] = eos, temp
+        lane.topk[slot], lane.seed[slot] = topk, seed
+        hit = eos >= 0 and tok == eos
+        if hit or lane.budget[slot] <= 0:
+            self._finish(lane, row, FINISH_EOS if hit else FINISH_LENGTH,
+                         now)
+        else:
+            lane.active[slot] = True
+
+    # --------------------------------------------------- chunked prefill
+    def _begin_fills(self, claimed, lane: _Lane) -> None:
+        """Reserve a lane slot + a staging slot per long-prompt join; the
+        prompt then advances one chunk per scheduler turn in _fill_chunk.
+        Failure handling mirrors _prefill: claimed futures are RUNNING, so
+        fail them here and release both slots."""
+        eng = self.eng
+        try:
+            staging = lane.get_staging(eng)
+            temp, topk, seed, eos, budget, _ = eng._sampling_arrays(claimed)
+            slots = lane.pool.assign_many([id(r) for r in claimed])
+            stg = staging.assign_many([id(r) for r in claimed])
+            t0 = time.perf_counter()
+            for i, r in enumerate(claimed):
+                r.t_start = t0
+                lane.fills.append(_Fill(
+                    req=r, slot=slots[i], stg=stg[i],
+                    temp=float(temp[i]), topk=int(topk[i]),
+                    seed=int(seed[i]), eos=int(eos[i]),
+                    budget=int(budget[i])))
+        except Exception as e:
+            ids = {id(r) for r in claimed}
+            self._release_fills(lane, [f for f in lane.fills
+                                       if id(f.req) in ids])
+            for pool in (lane.pool, lane.staging):
+                if pool is None:
+                    continue
+                for slot, rid in enumerate(pool.request_of):
+                    if rid in ids:
+                        pool.release(slot)
+            for r in claimed:
+                if not r.future.done():
+                    r.future.set_exception(e)
+
+    def _release_fills(self, lane: _Lane, fills) -> None:
+        for f in fills:
+            if f in lane.fills:
+                lane.fills.remove(f)
+            lane.pool.release(f.slot)
+            if lane.staging is not None:
+                lane.staging.release(f.stg)
+
+    def _fill_chunk(self, lane: _Lane) -> None:
+        """Advance every in-flight fill of this lane by one prompt chunk
+        (one jitted call over the fill batch). Fills whose prompt completes
+        are copied staging -> lane slot (one chunk-granular write_back) and
+        join the decode set with their first token."""
+        eng = self.eng
+        now = time.perf_counter()
+        for f in list(lane.fills):       # cancelled mid-prefill: retire
+            h = f.req.handle
+            if h is not None and h.cancel_requested:
+                self._release_fills(lane, [f])
+                f.req.t_prefill_done = now
+                self._resolve(f.req, [], FINISH_CANCELLED, now)
+        if not lane.fills:
+            return
+        try:
+            self._fill_chunk_inner(lane)
+        except Exception as e:
+            fills = list(lane.fills)
+            self._release_fills(lane, fills)
+            for f in fills:
+                if not f.req.future.done():
+                    f.req.future.set_exception(e)
+
+    def _fill_chunk_inner(self, lane: _Lane) -> None:
+        eng = self.eng
+        C = eng.ec.prefill_chunk
+        fills = list(lane.fills)
+        B = len(fills)
+        staging = lane.get_staging(eng)
+        toks = np.zeros((B, C), np.int32)
+        start = np.zeros(B, np.int32)
+        nvalid = np.zeros(B, np.int32)
+        temp = np.zeros(B, np.float32)
+        topk = np.zeros(B, np.int32)
+        seed = np.zeros(B, np.int32)
+        for i, f in enumerate(fills):
+            chunk = np.asarray(f.req.tokens)[f.filled:f.filled + C]
+            toks[i, :len(chunk)] = chunk
+            start[i], nvalid[i] = f.filled, len(chunk)
+            temp[i], topk[i], seed[i] = f.temp, f.topk, f.seed
+        any_sample = bool((temp > 0).any())
+        sargs = ((jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(seed))
+                 if any_sample else (None, None, None))
+        stg_slots = [f.stg for f in fills]
+        first, caches = eng._chunk_fn()(
+            eng.params, jnp.asarray(toks), jnp.asarray(start),
+            jnp.asarray(nvalid), staging.batch_view(stg_slots), *sargs)
+        staging.write_back(
+            stg_slots, caches,
+            lengths=[f.filled + int(nvalid[i])
+                     for i, f in enumerate(fills)])
+        first = np.asarray(first)
+        eng._stats["prefill_chunks"] += B
+        eng._lane_stat(lane.bucket)["prefill_chunks"] += B
+        done = []
+        for i, f in enumerate(fills):
+            f.filled += int(nvalid[i])
+            if f.filled >= len(f.req.tokens):
+                done.append((i, f))
+        if not done:
+            return
+        t1 = time.perf_counter()
+        # one scatter installs every completed prompt into its lane slot
+        lane.pool.write_back(
+            [f.slot for _, f in done],
+            staging.batch_view([f.stg for _, f in done]),
+            lengths=[f.filled + 1 for _, f in done])
+        for i, f in done:
+            lane.fills.remove(f)
+            staging.release(f.stg)
+            f.req.t_prefill_done = t1
+            self._start_row(lane, f.req, f.slot, int(first[i]), f.filled,
+                            budget=f.budget, eos=f.eos, temp=f.temp,
+                            topk=f.topk, seed=f.seed, now=t1)
 
     # ------------------------------------------------------ decode steps
-    def _segment(self) -> None:
+    def _segment(self, lane: _Lane) -> None:
         eng = self.eng
-        pool = eng._get_pool(self.bucket)
-        any_sample = any(self.temp[s] > 0 for s in self.rows)
-        sargs = ((jnp.asarray(self.temp), jnp.asarray(self.topk),
-                  jnp.asarray(self.seed)) if any_sample
+        pool = lane.pool
+        any_sample = any(lane.temp[s] > 0 for s in lane.rows)
+        sargs = ((jnp.asarray(lane.temp), jnp.asarray(lane.topk),
+                  jnp.asarray(lane.seed)) if any_sample
                  else (None, None, None))
         toks, emits, state, caches = eng._segment_fn()(
-            eng.params, jnp.asarray(self.last_tok[:, None]),
-            jnp.asarray(self.pos[:, None]), pool.caches,
-            jnp.asarray(self.active), jnp.asarray(self.budget),
-            jnp.asarray(self.eos), *sargs)
+            eng.params, jnp.asarray(lane.last_tok[:, None]),
+            jnp.asarray(lane.pos[:, None]), pool.caches,
+            jnp.asarray(lane.active), jnp.asarray(lane.budget),
+            jnp.asarray(lane.eos), *sargs)
         pool.caches = caches
         toks, emits = np.asarray(toks), np.asarray(emits)
         st_active = np.asarray(state["active"])
         st_eos = np.asarray(state["eos_hit"])
-        self.last_tok = np.asarray(state["tok"])[:, 0].copy()
-        self.pos = np.asarray(state["pos"])[:, 0].copy()
-        self.budget = np.asarray(state["budget"]).copy()
-        self.active = st_active.copy()
-        eng.batch_sizes.append(len(self.rows))   # per-segment occupancy
+        lane.last_tok = np.asarray(state["tok"])[:, 0].copy()
+        lane.pos = np.asarray(state["pos"])[:, 0].copy()
+        lane.budget = np.asarray(state["budget"]).copy()
+        lane.active = st_active.copy()
+        eng.batch_sizes.append(len(lane.rows))   # per-segment occupancy
         eng._stats["decode_segments"] += 1
+        stat = eng._lane_stat(lane.bucket)
+        stat["decode_segments"] += 1
+        stat["occupancy_sum"] += len(lane.rows)
         now = time.perf_counter()
-        for s, row in list(self.rows.items()):
+        for s, row in list(lane.rows.items()):
             new = toks[s][emits[s]].tolist()
             row.toks.extend(new)
             row.req.handle._push(new)
-            pool.lengths[s] = int(self.pos[s]) + 1
+            pool.lengths[s] = int(lane.pos[s]) + 1
             if not st_active[s]:
-                self._finish(row, FINISH_EOS if st_eos[s] else FINISH_LENGTH,
-                             now)
+                self._finish(lane, row,
+                             FINISH_EOS if st_eos[s] else FINISH_LENGTH, now)
             elif row.req.handle.cancel_requested:
-                self._finish(row, FINISH_CANCELLED, now)
+                self._finish(lane, row, FINISH_CANCELLED, now)
 
     # ------------------------------------------------------------ retire
-    def _finish(self, row: _Row, reason: str, now: float) -> None:
+    def _resolve(self, r, toks, reason: str, now: float) -> None:
         eng = self.eng
-        r = row.req
-        del self.rows[row.slot]
-        eng._get_pool(self.bucket).release(row.slot)
-        self.active[row.slot] = False
         timing = RequestTiming(queue_s=r.t_start - r.t_submit,
                                prefill_s=r.t_prefill_done - r.t_start,
                                decode_s=now - r.t_prefill_done)
         eng.timings.append(timing)
         eng.latencies.append(now - r.t_submit)
         r.future.set_result(GenerationResult(
-            tokens=np.asarray(row.toks, np.int32), finish_reason=reason,
+            tokens=np.asarray(toks, np.int32), finish_reason=reason,
             timing=timing, request_id=r.handle.request.request_id))
 
+    def _finish(self, lane: _Lane, row: _Row, reason: str,
+                now: float) -> None:
+        del lane.rows[row.slot]
+        lane.pool.release(row.slot)
+        lane.active[row.slot] = False
+        self._resolve(row.req, row.toks, reason, now)
+
     def _fail_inflight(self, exc: Exception) -> None:
-        for row in list(self.rows.values()):
-            del self.rows[row.slot]
-            self.eng._get_pool(self.bucket).release(row.slot)
-            self.active[row.slot] = False
-            if not row.req.future.done():
-                row.req.future.set_exception(exc)
+        for lane in self.lanes.values():
+            for row in list(lane.rows.values()):
+                del lane.rows[row.slot]
+                lane.pool.release(row.slot)
+                lane.active[row.slot] = False
+                if not row.req.future.done():
+                    row.req.future.set_exception(exc)
+            fills = list(lane.fills)
+            self._release_fills(lane, fills)
+            for f in fills:
+                if not f.req.future.done():
+                    f.req.future.set_exception(exc)
 
     def _shutdown(self) -> None:
         err = RuntimeError("engine is closed")

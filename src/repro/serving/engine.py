@@ -46,11 +46,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (decode_segment, decode_step, forward, make_caches,
-                          sample_logits)
+                          prefill_chunk, sample_logits)
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationRequest, GenerationResult, HeadFn,
                                RequestHandle, RequestTiming, SamplingParams)
-from repro.serving.kvcache import CachePool
+from repro.serving import kvcache
+from repro.serving.kvcache import CachePool, _take_slots
 from repro.serving.scheduler import AdmissionQueue, RequestQueue
 
 
@@ -74,6 +75,16 @@ class EngineConfig:
     # False = batch-at-a-time, kept for A/B equivalence runs.
     continuous: bool = True
     decode_segment: int = 4              # decode steps per jitted segment
+    # per-bucket lanes: requests admit into their own bucket's slot set
+    # immediately instead of waiting for another bucket's set to drain.
+    # False = legacy single-set admission gate, kept for A/B runs
+    # (bench_multi_bucket's baseline).
+    multi_lane: bool = True
+    # chunked prefill: a join whose prompt exceeds this many tokens
+    # prefills in chunks of this size, interleaved with decode segments,
+    # instead of stalling every in-flight row for the whole prompt's
+    # forward. None = whole-prompt prefill (token-identical either way).
+    prefill_chunk: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -131,21 +142,42 @@ class ServingEngine:
         self.batch_sizes: List[int] = []
         self.timings: List[RequestTiming] = []    # v2 per-phase breakdowns
         self._stats = {"decode_segments": 0, "joins_mid_flight": 0,
-                       "prefill_batches": 0}
+                       "prefill_batches": 0, "prefill_chunks": 0}
+        self.lane_stats = {}              # bucket -> per-lane counters
         # window() cursors: list lengths + counter values at the last snap
         self._win_cursor = {"latencies": 0, "batch_sizes": 0, "timings": 0,
-                            "stats": dict(self._stats)}
+                            "stats": dict(self._stats), "lanes": {}}
         self._stop = threading.Event()
         # reentrant: a done-callback attached under the lock can fire
         # synchronously (future cancelled in the attach window) and re-enter
         self._submit_lock = threading.RLock()  # orders submit vs close
         self._overflow = RequestQueue()        # admission overflow (priority)
+        self._parked_cancelled = 0             # phantoms still in the heap
         self._compiled = {}
         self._pools = {}                  # bucket -> CachePool
         self.continuous_active = (
             engine_cfg.mode == "decoder" and engine_cfg.continuous
             and engine_cfg.use_scan_decode and engine_cfg.use_cache_pool)
+        C = engine_cfg.prefill_chunk
+        if self.continuous_active and C is not None:
+            if C < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {C}")
+            for b in engine_cfg.pad_buckets:
+                # the final chunk is padded up to a multiple of C; those
+                # padded positions land in the slot's KV ring and must not
+                # wrap past its length (bucket + max_new_tokens), or they
+                # would silently overwrite the prompt prefix's KV
+                if -(-b // C) * C > b + engine_cfg.max_new_tokens:
+                    raise ValueError(
+                        f"prefill_chunk={C} rounds bucket {b} prompts up "
+                        f"to {-(-b // C) * C} cache positions, past the "
+                        f"slot's {b + engine_cfg.max_new_tokens}; pick a "
+                        f"chunk dividing the bucket or raise "
+                        f"max_new_tokens")
         if self.continuous_active:
+            for b in engine_cfg.pad_buckets:
+                self._lane_stat(b)   # fixed key set: metrics() iterates
+                                     # lane_stats without a lock
             from repro.serving.continuous import ContinuousScheduler
             self._scheduler = ContinuousScheduler(self)
             target = self._scheduler.run
@@ -180,6 +212,13 @@ class ServingEngine:
         try:
             if self._stop.is_set():
                 raise RuntimeError("engine is closed")
+            if toks.ndim != 1 or toks.size < 1:
+                # an empty prompt would flow lens - 1 == -1 into the
+                # prefill's take_along_axis, wrapping to the last padded
+                # position — the first token would sample from garbage
+                raise ValueError(
+                    f"prompt must be a non-empty 1-D token sequence, got "
+                    f"shape {toks.shape}")
             budget = request.sampling.validate(self.ec.max_new_tokens)
             if (request.sampling.temperature > 0
                     and not self.ec.use_scan_decode):
@@ -242,9 +281,16 @@ class ServingEngine:
                 else:
                     # saturated: park without blocking the submitter; a
                     # finishing request's done-callback transfers its slot
-                    # to the best-priority parked request
+                    # to the best-priority parked request. The reported
+                    # depth excludes requests cancelled while parked
+                    # (they sit in the heap until a pop scans past them,
+                    # but wait for nothing): a cancelled future can only
+                    # have been parked — running ones refuse cancel — so
+                    # a done-callback counts them in O(1) per submit
                     self._overflow.push(req, req.priority)
-                    self._admission.note_queued(len(self._overflow))
+                    req.future.add_done_callback(self._on_parked_done)
+                    self._admission.note_queued(
+                        len(self._overflow) - self._parked_cancelled)
             return
         # the lock orders this enqueue against close()'s drain: either the
         # request lands before the drain (and is failed by it) or it sees
@@ -264,11 +310,27 @@ class ServingEngine:
         req.future.add_done_callback(self._on_admitted_done)
         self._q.put(req)
 
+    def _on_parked_done(self, fut) -> None:
+        if fut.cancelled():
+            with self._submit_lock:
+                self._parked_cancelled += 1
+
+    def _drop_parked(self, r) -> bool:
+        """Pop predicate: discard done (cancelled-while-parked) entries,
+        reconciling the phantom counter as they physically leave the heap.
+        Caller holds _submit_lock; pop discards a matched entry exactly
+        once."""
+        if r.future.done():
+            if r.future.cancelled():
+                self._parked_cancelled -= 1
+            return True
+        return False
+
     def _on_admitted_done(self, _fut) -> None:
         with self._submit_lock:
             if not self._stop.is_set():
                 # requests cancelled while parked hold no slot: drop them
-                nxt = self._overflow.pop(drop=lambda r: r.future.done())
+                nxt = self._overflow.pop(drop=self._drop_parked)
                 if nxt is not None:
                     self._admission.admit_transfer(
                         time.perf_counter() - nxt.t_submit)
@@ -276,30 +338,92 @@ class ServingEngine:
                     return
             self._admission.release()
 
-    def warmup(self, batch_sizes=None, *, timeout: float = 600) -> None:
+    def warmup(self, batch_sizes=None, *, buckets=None,
+               timeout: float = 600) -> None:
         """Compile every batch shape a workload can hit, so jit compiles
         land here instead of inside the first measured request.
 
-        Encoder and batch-at-a-time decoder modes serve one synthetic
-        batch per size in ``batch_sizes`` (default ``1..max_batch``)
-        through the serve path; the continuous decoder submits a full
-        ``max_batch`` burst (compiling the prefill join sizes the burst
-        forms plus the segment fn). Warmup requests count into the
-        cumulative ``metrics()`` — callers measuring afterwards should
-        attribute via ``window()``.
+        Every bucket in ``buckets`` (default: all ``pad_buckets`` — a
+        mixed-length workload pays a first-request compile per bucket it
+        touches, not just ``pad_buckets[0]``) is primed for every batch
+        size in ``batch_sizes`` (default ``1..max_batch``). Encoder and
+        batch-at-a-time decoder modes serve one synthetic batch per
+        (bucket, size) through the serve path; the continuous decoder
+        primes each bucket's prefill-into-slot join sizes, its chunked-
+        prefill shapes (when ``prefill_chunk`` is set) and its decode
+        segment directly against the bucket's pool — deterministic, unlike
+        a burst of real requests whose join sizes depend on timing, and
+        without adding request samples to ``metrics()``. It must run
+        before serving traffic (it touches the pools the worker uses;
+        raises once requests are in flight). ``metrics()['jit_compiles']``
+        counts compiled serving variants (engine fns + the shared cache-
+        pool helpers); ``window()`` diffs it, so a measured span can
+        assert it stayed compile-clean. Encoder / batch-at-a-time warmup
+        serves real synthetic batches, which count into the cumulative
+        ``metrics()`` — callers measuring afterwards should attribute via
+        ``window()``.
         """
-        bucket = self.ec.pad_buckets[0]
-        tok = np.ones(min(8, bucket), np.int32)
+        buckets = tuple(buckets) if buckets else self.ec.pad_buckets
+        sizes = sorted(set(batch_sizes or range(1, self.ec.max_batch + 1)))
         if self.continuous_active:
-            handles = [self.generate(tok.copy())
-                       for _ in range(self.ec.max_batch)]
-            for h in handles:
-                h.result(timeout=timeout)
+            self._warmup_continuous(buckets, sizes)
             return
-        for b in batch_sizes or range(1, self.ec.max_batch + 1):
-            self._serve_batch([
-                _Request(tok.copy(), Future(), time.perf_counter())
-                for _ in range(b)])
+        for bucket in buckets:
+            tok = np.ones(bucket, np.int32)    # full width -> this bucket
+            for b in sizes:
+                self._serve_batch([
+                    _Request(tok.copy(), Future(), time.perf_counter())
+                    for _ in range(b)])
+
+    def _warmup_continuous(self, buckets, sizes) -> None:
+        """Prime the continuous scheduler's jitted shapes per bucket:
+        prefill-into-slot per join size (gather acquire, as the scheduler
+        uses), prefill chunks per fill-batch size, and the full-slot decode
+        segment (donating and swapping the pool caches exactly as a live
+        segment does)."""
+        if (self.latencies or not self._q.empty()
+                or any(l.busy for l in self._scheduler.lanes.values())):
+            # the worker would race these direct pool mutations (both
+            # sides donate pool.caches); the old request-burst warmup was
+            # traffic-safe, so fail loudly rather than corrupt quietly
+            raise RuntimeError("warmup() must run before serving traffic")
+        n = self.ec.max_batch
+        chunk = self.ec.prefill_chunk
+        for bucket in buckets:
+            pool = self._get_pool(bucket)
+            for b in sizes:
+                slots, view = pool.acquire(
+                    [f"warm{bucket}.{i}" for i in range(b)], gather=True)
+                toks = jnp.zeros((b, bucket), jnp.int32)
+                lens = jnp.full((b,), min(4, bucket), jnp.int32)
+                tok, caches = self._prefill_fn()(
+                    self.params, toks, lens, view, None, None, None)
+                pool.write_back(slots, caches)
+                jax.block_until_ready(tok)
+                pool.release_many(slots)
+                if chunk is not None and bucket > chunk:
+                    slots = pool.assign_many(
+                        [f"warmc{bucket}.{i}" for i in range(b)])
+                    # the fill path gathers fragmented staging slots via
+                    # _take_slots; batch_view on this fresh pool would
+                    # take the slice path and leave the gather uncompiled
+                    view = _take_slots(pool.caches,
+                                       jnp.asarray(slots, jnp.int32))
+                    ctok, caches = self._chunk_fn()(
+                        self.params, jnp.zeros((b, chunk), jnp.int32),
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.full((b,), chunk, jnp.int32), view,
+                        None, None, None)
+                    pool.write_back(slots, caches)
+                    jax.block_until_ready(ctok)
+                    pool.release_many(slots)
+            toks, _, _, caches = self._segment_fn()(
+                self.params, jnp.zeros((n, 1), jnp.int32),
+                jnp.zeros((n, 1), jnp.int32), pool.caches,
+                jnp.zeros((n,), bool), jnp.ones((n,), jnp.int32),
+                jnp.full((n,), -1, jnp.int32), None, None, None)
+            pool.caches = caches
+            jax.block_until_ready(toks)
 
     def close(self):
         self._stop.set()
@@ -427,6 +551,31 @@ class ServingEngine:
                 return tok, caches
             self._compiled["cont_prefill"] = jax.jit(fn)
         return self._compiled["cont_prefill"]
+
+    def _chunk_fn(self):
+        """Chunked-prefill step: run one prompt chunk against the rows'
+        staged caches (``models.prefill_chunk``) and select each row's
+        next-token candidate at its last valid chunk position — only
+        meaningful for rows whose prompt completes this chunk; the
+        scheduler ignores it for the rest. ``start`` is each row's
+        absolute chunk offset, ``nvalid`` its real tokens this chunk (all
+        chunks except a prompt's last are completely filled). jit
+        specializes per (n_fills, chunk_len) shape."""
+        if "cont_chunk" not in self._compiled:
+            def fn(params, toks, start, nvalid, caches, temp, topk, seed):
+                C = toks.shape[1]
+                positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)
+                logits, caches, _ = prefill_chunk(
+                    self.cfg, params, toks, positions, caches)
+                last = jnp.take_along_axis(
+                    logits, (nvalid - 1)[:, None, None], axis=1)[:, 0]
+                # PRNG counter = the position the sampled token occupies
+                # (the prompt length) — identical to whole-prompt prefill
+                tok = sample_logits(last, temperature=temp, top_k=topk,
+                                    seed=seed, positions=start + nvalid)
+                return tok, caches
+            self._compiled["cont_chunk"] = jax.jit(fn)
+        return self._compiled["cont_chunk"]
 
     def _segment_fn(self):
         """One jitted decode segment over the full slot batch (the
@@ -596,6 +745,50 @@ class ServingEngine:
                         r.future.set_exception(e)
 
     # ------------------------------------------------------------ metrics
+    def _lane_stat(self, bucket: int) -> dict:
+        """Per-lane counters (scheduler-side accumulation point)."""
+        stat = self.lane_stats.get(bucket)
+        if stat is None:
+            stat = self.lane_stats[bucket] = {
+                "decode_segments": 0, "occupancy_sum": 0, "joins": 0,
+                "prefill_chunks": 0}
+        return stat
+
+    def _jit_compiles(self) -> int:
+        """Compiled specializations across the serving path's jitted
+        functions — a counter measured spans can diff (via ``window()``)
+        to assert a workload hit only warmed shapes. Includes the
+        module-level cache-pool helpers (reset/gather/scatter): they are
+        shared process-wide, but the window diff only surfaces compiles
+        that happened during the span, which is the quantity a
+        single-engine measurement cares about."""
+        n = 0
+        # snapshot: the worker inserts newly built fns concurrently
+        pool_fns = (kvcache._reset_slots, kvcache._reset_and_view,
+                    kvcache._reset_and_view_run, kvcache._take_slots,
+                    kvcache._write_slots)
+        for fn in list(self._compiled.values()) + list(pool_fns):
+            fns = fn if isinstance(fn, tuple) else (fn,)
+            for f in fns:
+                size = getattr(f, "_cache_size", None)
+                if callable(size):
+                    n += size()
+        return n
+
+    @staticmethod
+    def _lane_view(now: dict, prev: Optional[dict] = None) -> dict:
+        """Lane counter dicts (optionally diffed against a window cursor)
+        with the occupancy mean derived per span."""
+        out = {}
+        for bucket, stat in now.items():
+            base = (prev or {}).get(bucket, {})
+            d = {k: v - base.get(k, 0) for k, v in stat.items()}
+            segs = d.get("decode_segments", 0)
+            d["occupancy_mean"] = (d.pop("occupancy_sum", 0) / segs
+                                   if segs else 0.0)
+            out[bucket] = d
+        return out
+
     def _aggregate(self, latencies, batch_sizes, timings, stats) -> dict:
         """Reduce one span of serving samples to the metrics dict shape."""
         n = len(latencies)
@@ -626,10 +819,16 @@ class ServingEngine:
     def metrics(self) -> dict:
         """Cumulative serving stats since engine start. With no completed
         requests the latency percentiles are None (never fabricated from a
-        zero sample). ``window()`` gives the same shape for the span since
-        the previous ``window()`` call."""
+        zero sample). Continuous engines additionally report per-lane
+        counters under ``'lanes'`` (bucket -> segments / occupancy mean /
+        joins / prefill chunks) and ``'jit_compiles'`` (compiled engine
+        specializations so far). ``window()`` gives the same shape for the
+        span since the previous ``window()`` call."""
         m = self._aggregate(self.latencies, self.batch_sizes, self.timings,
                             self._stats)
+        if self.continuous_active:
+            m["lanes"] = self._lane_view(self.lane_stats)
+            m["jit_compiles"] = self._jit_compiles()
         if self._admission is not None:
             m["admission_peak_queue"] = self._admission.stats.queued_peak
             m["admission_wait_total_s"] = self._admission.stats.wait_total_s
@@ -649,6 +848,7 @@ class ServingEngine:
         i_lat, i_bs, i_tim = (len(self.latencies), len(self.batch_sizes),
                               len(self.timings))
         stats_now = dict(self._stats)
+        lanes_now = {b: dict(s) for b, s in self.lane_stats.items()}
 
         def span(lst, start, stop):
             return lst[start if start <= stop else 0:stop]
@@ -656,8 +856,18 @@ class ServingEngine:
         m = self._aggregate(span(self.latencies, cur["latencies"], i_lat),
                             span(self.batch_sizes, cur["batch_sizes"], i_bs),
                             span(self.timings, cur["timings"], i_tim),
-                            {k: v - cur["stats"][k]
+                            {k: v - cur["stats"].get(k, 0)
                              for k, v in stats_now.items()})
-        self._win_cursor = {"latencies": i_lat, "batch_sizes": i_bs,
-                            "timings": i_tim, "stats": stats_now}
+        if self.continuous_active:
+            m["lanes"] = self._lane_view(lanes_now, cur.get("lanes"))
+            compiles = self._jit_compiles()
+            m["jit_compiles"] = compiles - cur.get("jit_compiles", 0)
+            self._win_cursor = {"latencies": i_lat, "batch_sizes": i_bs,
+                                "timings": i_tim, "stats": stats_now,
+                                "lanes": lanes_now,
+                                "jit_compiles": compiles}
+        else:
+            self._win_cursor = {"latencies": i_lat, "batch_sizes": i_bs,
+                                "timings": i_tim, "stats": stats_now,
+                                "lanes": lanes_now}
         return m

@@ -67,6 +67,15 @@ def _write_slots(caches, batch, idx):
     return jax.tree.map(lambda x, b: x.at[:, idx].set(b), caches, batch)
 
 
+@jax.jit
+def _take_slots(caches, idx):
+    """Fused batch-view gather: one device dispatch per view (vs an eager
+    per-leaf ``jnp.take`` sweep), specializing on the slot *count* only —
+    chunked prefill gathers its fill batch's staged slots every chunk, at
+    arbitrary (fragmenting) offsets."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=1), caches)
+
+
 class CachePool:
     def __init__(self, cfg, n_slots: int, max_len: int, *, long_ctx=False,
                  dtype=jnp.bfloat16):
@@ -152,20 +161,24 @@ class CachePool:
 
     def batch_view(self, slots: Sequence[int]):
         """Batch-sized cache pytree for the given slots (slot k of the view
-        is pool slot slots[k]). Contiguous slots -> cheap slice."""
+        is pool slot slots[k]). Contiguous slots -> cheap slice; otherwise
+        one fused jitted gather (compiled per slot count, not offsets)."""
         slots = list(slots)
         lo, n = slots[0], len(slots)
         if slots == list(range(lo, lo + n)):
             return jax.tree.map(
                 lambda x: jax.lax.slice_in_dim(x, lo, lo + n, axis=1),
                 self.caches)
-        idx = jnp.asarray(slots, jnp.int32)
-        return jax.tree.map(lambda x: jnp.take(x, idx, axis=1), self.caches)
+        return _take_slots(self.caches, jnp.asarray(slots, jnp.int32))
 
     def write_back(self, slots: Sequence[int], batch_caches,
                    lengths: Optional[Sequence[int]] = None) -> None:
         """Store a batch view's (updated) caches back into the pool slots —
-        the persistence hook for step-granularity continuous batching."""
+        the persistence hook for step-granularity continuous batching.
+        Chunk-granular by design: chunked prefill calls this once per
+        prompt chunk with the fill's staged caches and its partial
+        ``lengths`` (tokens staged so far), so pool bookkeeping tracks
+        prefill progress, not just completed prompts."""
         idx = jnp.asarray(list(slots), jnp.int32)
         self.caches = _write_slots(self.caches, batch_caches, idx)
         if lengths is not None:

@@ -50,6 +50,17 @@ class RequestQueue:
             heapq.heappush(self._heap, entry)
         return best
 
+    def peek_key(self, drop=None):
+        """(-priority, seq) of the best live entry, discarding ``drop``
+        matches from the top; None when empty. Lets a multi-lane scheduler
+        compare lane heads without popping."""
+        while self._heap:
+            if drop is not None and drop(self._heap[0][2]):
+                heapq.heappop(self._heap)
+                continue
+            return self._heap[0][:2]
+        return None
+
     def drain(self) -> List:
         items = [e[2] for e in sorted(self._heap)]
         self._heap.clear()
@@ -60,6 +71,63 @@ class RequestQueue:
 
     def __bool__(self) -> bool:
         return bool(self._heap)
+
+
+class LaneQueue:
+    """Pending requests partitioned by scheduling lane (pad bucket).
+
+    The single-set scheduler kept one shared heap and popped with a
+    bucket predicate — an O(pending) pop/push rescan every segment while
+    requests for *other* buckets sat in the heap. Keying a ``RequestQueue``
+    per lane makes the per-lane pop O(log n_lane) and gives the multi-lane
+    scheduler its admission view: which lanes have work, and which lane
+    holds the globally best request (priority order, FIFO within a level,
+    consistent across lanes via the shared sequence counter). Not
+    thread-safe — owned by the scheduler worker thread."""
+
+    def __init__(self):
+        self._lanes: dict = {}           # lane key -> RequestQueue
+        self._seq = itertools.count()    # shared: cross-lane FIFO ordering
+
+    def push(self, item, priority: int = 0, *, lane) -> None:
+        q = self._lanes.get(lane)
+        if q is None:
+            q = self._lanes[lane] = RequestQueue()
+            q._seq = self._seq           # one counter across all lanes
+        q.push(item, priority)
+
+    def pop(self, lane, drop=None):
+        q = self._lanes.get(lane)
+        return q.pop(drop=drop) if q is not None else None
+
+    def lanes(self) -> List:
+        """Lane keys that currently hold entries (insertion order)."""
+        return [k for k, q in self._lanes.items() if q]
+
+    def lane_len(self, lane) -> int:
+        q = self._lanes.get(lane)
+        return len(q) if q is not None else 0
+
+    def best_lane(self, drop=None):
+        """The lane whose head is the globally best pending request."""
+        best_key, best_lane = None, None
+        for lane, q in self._lanes.items():
+            key = q.peek_key(drop=drop)
+            if key is not None and (best_key is None or key < best_key):
+                best_key, best_lane = key, lane
+        return best_lane
+
+    def drain(self) -> List:
+        items = []
+        for q in self._lanes.values():
+            items.extend(q.drain())
+        return items
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._lanes.values())
+
+    def __bool__(self) -> bool:
+        return any(self._lanes.values())
 
 
 @dataclass

@@ -1,0 +1,246 @@
+"""Multi-lane continuous scheduling + chunked prefill, and the serving-path
+bugfix sweep that rode along: cross-bucket joins admit without waiting for
+another bucket's set to drain, chunked prefill is token-identical to
+whole-prompt prefill, empty prompts are rejected through the handle, warmup
+primes every bucket (no compiles in the measured window), the admission
+queue depth ignores cancelled parked requests, and run_ladder's warmup
+clears the phase-timing samples it used to leak into metrics()."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.loadtest import mixed_bucket_prompts, run_ladder
+from repro.models import init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+RNG = np.random.RandomState(23)
+
+
+def _engine(**kw):
+    base = dict(mode="decoder", max_batch=4, max_new_tokens=6,
+                pad_buckets=(16, 32), decode_segment=2)
+    base.update(kw)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base))
+
+
+def _prompt(n):
+    return RNG.randint(0, CFG.vocab_size, (n,))
+
+
+# ------------------------------------------------------- cross-bucket lanes
+def test_cross_bucket_join_admits_without_waiting_for_drain():
+    """A bucket-32 request arriving while the bucket-16 set decodes must
+    admit into its own lane immediately — with lanes it finishes while the
+    bucket-16 request is still in flight; the legacy single-set gate makes
+    it wait for the full drain."""
+    eng = _engine(max_new_tokens=48)
+    try:
+        eng.warmup(batch_sizes=[1])
+        h1 = eng.generate(_prompt(8))                 # bucket 16, long
+        next(iter(h1))                                # decode underway
+        h2 = eng.generate(_prompt(24),                # bucket 32, short
+                          SamplingParams(max_new_tokens=2))
+        h2.result(timeout=300)
+        assert not h1.done()      # b16 still decoding: no head-of-line wait
+        h1.result(timeout=300)
+        lanes = eng.metrics()["lanes"]
+        assert lanes[16]["decode_segments"] > 0
+        assert lanes[32]["decode_segments"] > 0
+        assert lanes[32]["joins"] >= 1                # mid-flight, own lane
+    finally:
+        eng.close()
+
+
+def test_single_set_gate_recreates_head_of_line_wait():
+    eng = _engine(max_new_tokens=48, multi_lane=False)
+    try:
+        eng.warmup(batch_sizes=[1])
+        h1 = eng.generate(_prompt(8))
+        next(iter(h1))
+        h2 = eng.generate(_prompt(24), SamplingParams(max_new_tokens=2))
+        h2.result(timeout=300)
+        assert h1.done()          # b32 had to wait for the b16 drain
+    finally:
+        eng.close()
+
+
+def test_lanes_match_batch_at_a_time_greedy_across_buckets():
+    """Acceptance: greedy outputs stay token-identical to batch-at-a-time
+    across buckets, with and without chunked prefill."""
+    prompts = [_prompt(n) for n in (27, 9, 14, 30)]
+    outs = {}
+    for name, kw in (("batch", dict(continuous=False)),
+                     ("lanes", dict()),
+                     ("chunked", dict(prefill_chunk=8))):
+        eng = _engine(**kw)
+        try:
+            hs = [eng.generate(p) for p in prompts]
+            outs[name] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for name in ("lanes", "chunked"):
+        for a, b in zip(outs["batch"], outs[name]):
+            assert (a == b).all(), name
+
+
+# ---------------------------------------------------------- chunked prefill
+def test_chunked_prefill_token_identical_and_counted():
+    prompts = [_prompt(n) for n in (28, 20, 9)]
+    outs = {}
+    for chunk in (None, 8):
+        eng = _engine(prefill_chunk=chunk)
+        try:
+            hs = [eng.generate(p) for p in prompts]
+            outs[chunk] = [h.result(timeout=300).tokens for h in hs]
+            if chunk is not None:
+                m = eng.metrics()
+                # 28 -> 4 chunks, 20 -> 3, 9 -> 2
+                assert m["prefill_chunks"] >= 9
+                assert m["lanes"][32]["prefill_chunks"] >= 7
+        finally:
+            eng.close()
+    for a, b in zip(outs[None], outs[8]):
+        assert (a == b).all()
+
+
+def test_chunked_prefill_interleaves_with_inflight_decode():
+    """A long-prompt join must not stall the in-flight row for its whole
+    prefill: its chunks interleave with decode segments, and both requests
+    finish correct lengths."""
+    eng = _engine(max_new_tokens=24, prefill_chunk=4)
+    try:
+        eng.generate(_prompt(5)).result(timeout=300)  # warm the compiles
+        h1 = eng.generate(_prompt(5))                 # bucket 16, decoding
+        next(iter(h1))
+        h2 = eng.generate(_prompt(30))                # 8 chunks of 4
+        r1, r2 = h1.result(timeout=300), h2.result(timeout=300)
+        assert len(r1.tokens) == 24 and len(r2.tokens) == 24
+        m = eng.metrics()
+        assert m["prefill_chunks"] >= 8
+        assert m["lanes"][32]["joins"] >= 1
+    finally:
+        eng.close()
+
+
+def test_cancel_mid_chunked_prefill_resolves_cancelled():
+    eng = _engine(max_new_tokens=24, prefill_chunk=4)
+    try:
+        eng.generate(_prompt(4)).result(timeout=300)  # warm compiles
+        blocker = eng.generate(_prompt(4))            # whole-prefill path:
+        h = eng.generate(_prompt(30))                 # only h chunks (8x4)
+        deadline = time.time() + 60                   # fill underway
+        while eng.metrics()["prefill_chunks"] < 1:
+            assert time.time() < deadline
+            time.sleep(0.001)
+        assert h.cancel()
+        res = h.result(timeout=300)
+        assert res.finish_reason == "cancelled"
+        blocker.result(timeout=300)
+        ok = eng.generate(_prompt(30)).result(timeout=300)
+        assert len(ok.tokens) == 24                   # slots not leaked
+    finally:
+        eng.close()
+
+
+def test_prefill_chunk_ring_overflow_rejected_at_init():
+    """A chunk size whose padded round-up exceeds the slot's KV length
+    would wrap the ring and overwrite the prompt prefix — the engine must
+    refuse the config instead of corrupting silently."""
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _engine(pad_buckets=(32,), prefill_chunk=12, max_new_tokens=2)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _engine(prefill_chunk=0)
+    _engine(pad_buckets=(32,), prefill_chunk=8, max_new_tokens=2).close()
+
+
+# --------------------------------------------------------- bugfix satellites
+def test_empty_prompt_rejected_through_handle():
+    eng = _engine()
+    try:
+        h = eng.generate(np.zeros(0, np.int32))
+        with pytest.raises(ValueError, match="non-empty"):
+            h.result(timeout=10)
+        with pytest.raises(ValueError):
+            eng.submit(np.zeros(0, np.int32)).result(timeout=10)
+        assert eng.generate(_prompt(4)).result(timeout=300) is not None
+    finally:
+        eng.close()
+
+
+def test_warmup_primes_all_buckets_no_compiles_in_window():
+    eng = _engine(prefill_chunk=8)
+    try:
+        eng.warmup()
+        eng.window()                                  # reset the window
+        prompts = mixed_bucket_prompts((16, 32), 6, CFG.vocab_size,
+                                       rng_seed=3)
+        hs = [eng.generate(p) for p in prompts]
+        for h in hs:
+            h.result(timeout=300)
+        w = eng.window()
+        assert w["requests"] == 6
+        assert w["jit_compiles"] == 0                 # compile-clean span
+    finally:
+        eng.close()
+
+
+def test_warmup_primes_buckets_batch_at_a_time():
+    eng = _engine(continuous=False)
+    try:
+        eng.warmup(batch_sizes=[1, 2])
+        n = eng._jit_compiles()
+        hs = [eng.generate(_prompt(k)) for k in (8, 24)]
+        for h in hs:
+            h.result(timeout=300)
+        assert eng._jit_compiles() == n               # both buckets primed
+    finally:
+        eng.close()
+
+
+def test_admission_peak_queue_ignores_cancelled_parked():
+    eng = _engine(max_inflight=1, max_new_tokens=24, pad_buckets=(16,))
+    try:
+        eng.generate(_prompt(4)).result(timeout=300)  # warm compiles
+        a = eng.generate(_prompt(4))                  # holds the one slot
+        b = eng.generate(_prompt(4))                  # parked (depth 1)
+        assert b.cancel()
+        c = eng.generate(_prompt(4))                  # parked; b is phantom
+        d = eng.generate(_prompt(4))                  # parked (depth 2)
+        for h in (a, c, d):
+            h.result(timeout=300)
+        assert eng.metrics()["admission_peak_queue"] == 2
+    finally:
+        eng.close()
+
+
+def test_run_ladder_warmup_clears_phase_timings():
+    eng = _engine(pad_buckets=(16,))
+    try:
+        sents = [_prompt(6) for _ in range(4)]
+        run_ladder(eng, sents, ladder=(2,), repeats=1, warmup=True)
+        # only the 2 measured requests contribute phase timings — the
+        # compile-laden warmup request must not leak into the means
+        assert len(eng.timings) == 2
+        assert eng.metrics()["requests"] == 2
+    finally:
+        eng.close()
+
+
+def test_lane_counters_window_diff():
+    eng = _engine()
+    try:
+        eng.generate(_prompt(8)).result(timeout=300)
+        w1 = eng.window()
+        assert w1["lanes"][16]["decode_segments"] >= 1
+        eng.generate(_prompt(24)).result(timeout=300)
+        w2 = eng.window()
+        assert w2["lanes"][16]["decode_segments"] == 0   # diffed away
+        assert w2["lanes"][32]["decode_segments"] >= 1
+        assert eng.metrics()["lanes"][16]["decode_segments"] >= 1
+    finally:
+        eng.close()
