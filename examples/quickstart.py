@@ -1,21 +1,25 @@
-"""Quickstart: pick any assigned architecture, run a forward pass and a few
-greedy decode steps on CPU with the reduced (smoke) config.
+"""Quickstart: serve any registry architecture end-to-end through the v2
+serving API — multi-lane continuous batching, chunked prefill, streaming,
+and occupancy-adaptive decode-segment widths, on CPU with the reduced
+(smoke) config. CI runs this as the examples smoke check.
 
-  PYTHONPATH=src python examples/quickstart.py --arch gemma2-27b
+  PYTHONPATH=src python examples/quickstart.py --arch qwen2-0.5b
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.models import decode_step, forward, init_params, make_caches
+from repro.models import init_params
+from repro.serving import (EngineConfig, GenerationRequest, SamplingParams,
+                           ServingEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
-    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -28,33 +32,71 @@ def main():
     print(f"running reduced variant: {cfg.n_layers}L d={cfg.d_model} "
           f"pattern={cfg.pattern}")
 
-    rng = jax.random.PRNGKey(0)
-    params = init_params(cfg, rng)
+    params = init_params(cfg, jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"reduced params: {n_params/1e6:.2f}M")
 
-    toks = jax.random.randint(rng, (1, args.tokens), 0, cfg.vocab_size)
-    kw = {}
-    if cfg.enc_layers:
-        kw["enc_tokens_embeds"] = jnp.zeros((1, cfg.enc_seq_len,
-                                             cfg.d_model), jnp.float32)
-    if cfg.vis_tokens:
-        kw["prefix_embeds"] = jnp.zeros((1, cfg.vis_tokens, cfg.d_model),
-                                        jnp.float32)
-    logits, _, _ = forward(cfg, params, tokens=toks, **kw)
-    print(f"prefill logits: {logits.shape}, "
-          f"ppl(random)={float(jnp.exp(-jax.nn.log_softmax(logits).mean())):.1f}")
+    # Two pad buckets -> two scheduling lanes; prompts longer than
+    # prefill_chunk tokens prefill chunk-by-chunk, interleaved with decode
+    # segments; segment widths track lane occupancy (the default).
+    eng = ServingEngine(cfg, params, EngineConfig(
+        mode="decoder", max_batch=4, max_new_tokens=args.max_new_tokens,
+        pad_buckets=(16, 32), decode_segment=2, prefill_chunk=8))
+    rng = np.random.RandomState(0)
+    try:
+        print("\ncompiling every (bucket x join size x width tier) ...")
+        eng.warmup(batch_sizes=[1, 2])
+        # warmup primes the greedy graphs; sampling (temperature > 0) is a
+        # separate jit variant — warm it with one throwaway request
+        eng.generate(rng.randint(0, cfg.vocab_size, (5,)),
+                     SamplingParams(temperature=0.7, top_k=16,
+                                    seed=1)).result(600)
+        eng.window()                       # measured span starts here
 
-    caches = make_caches(cfg, 1, 64, dtype=jnp.float32)
-    tok = toks[:, :1]
-    out = []
-    ekw = {k: v for k, v in kw.items() if k == "enc_tokens_embeds"}
-    for t in range(8):
-        pos = jnp.full((1, 1), t, jnp.int32)
-        logits, caches, _ = decode_step(cfg, params, tok, pos, caches, **ekw)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(int(tok[0, 0]))
-    print("greedy decode (untrained):", out)
+        # a typed request: prompt + per-request sampling, streamed
+        # (7 tokens: whole-prompt prefill — the sampled chunked-prefill
+        # graph is the one variant the throwaway above did not warm)
+        h1 = eng.generate(GenerationRequest(
+            tokens=rng.randint(0, cfg.vocab_size, (7,)),     # bucket 16
+            sampling=SamplingParams(temperature=0.7, top_k=16, seed=1),
+            request_id="stream-demo"))
+        h2 = None
+        print("h1 tokens:", end=" ", flush=True)
+        for i, tok in enumerate(h1):       # streams per decode segment
+            print(tok, end=" ", flush=True)
+            if i == 2:                     # h1 is mid-decode: a long
+                h2 = eng.generate(         # prompt joins the OTHER lane,
+                    rng.randint(0, cfg.vocab_size, (30,)))   # chunked
+        print()
+        if h2 is None:                     # --max-new-tokens < 3: h1's
+            h2 = eng.generate(             # stream ended before the mid-
+                rng.randint(0, cfg.vocab_size, (30,)))   # decode join
+        r1, r2 = h1.result(600), h2.result(600)
+        for name, r in (("h1", r1), ("h2", r2)):
+            t = r.timing
+            print(f"{name}: {len(r.tokens)} tokens finish={r.finish_reason} "
+                  f"queue {t.queue_s * 1e3:.0f}ms | prefill "
+                  f"{t.prefill_s * 1e3:.0f}ms | decode "
+                  f"{t.decode_s * 1e3:.0f}ms")
+
+        w = eng.window()
+        print(f"\nwindow: requests={w['requests']} "
+              f"joins_mid_flight={w['joins_mid_flight']} "
+              f"prefill_chunks={w['prefill_chunks']} "
+              f"jit_compiles={w['jit_compiles']} (0 = compile-clean)")
+        for bucket, lane in sorted(w["lanes"].items()):
+            print(f"  lane {bucket}: segments={lane['decode_segments']} "
+                  f"occupancy_mean={lane['occupancy_mean']:.2f} "
+                  f"tier_hist={lane['tier_hist']} "
+                  f"compact_segments={lane['compact_segments']}")
+        assert r2.finish_reason == "length"
+        assert w["prefill_chunks"] >= 4    # 30-token prompt, 8-token chunks
+        assert w["jit_compiles"] == 0      # the measured span compiled
+        #                                    nothing: warmup covered it
+        print("\nquickstart OK: v2 API, lanes, chunked prefill, "
+              "adaptive widths all exercised")
+    finally:
+        eng.close()
 
 
 if __name__ == "__main__":

@@ -25,24 +25,29 @@ from repro.serving import EngineConfig, SamplingParams, ServingEngine
 
 
 def decoder_demo():
+    """Serving API v2 end to end: two pad buckets served as independent
+    lanes, a sampled request streamed token by token, a long prompt
+    chunk-prefilled into the other lane mid-stream, and decode segments
+    compacted to each lane's live occupancy (width tiers)."""
     cfg = get_config("qwen2-0.5b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = ServingEngine(cfg, params, EngineConfig(
-        mode="decoder", max_batch=4, max_new_tokens=16, pad_buckets=(32,),
-        decode_segment=2))
+        mode="decoder", max_batch=4, max_new_tokens=16,
+        pad_buckets=(16, 32), decode_segment=2, prefill_chunk=8))
     rng = np.random.RandomState(0)
     try:
         print("\n-- serving API v2: request -> handle -> result --")
-        eng.generate(rng.randint(0, cfg.vocab_size, (8,))).result(600)  # warm
-        h1 = eng.generate(rng.randint(0, cfg.vocab_size, (12,)),
+        eng.warmup(batch_sizes=[1, 2])    # compile outside the demo
+        h1 = eng.generate(rng.randint(0, cfg.vocab_size, (12,)),  # lane 16
                           SamplingParams(temperature=0.7, top_k=16, seed=1),
                           request_id="stream-demo")
         h2 = None
         print("h1 tokens:", end=" ", flush=True)
         for i, tok in enumerate(h1):
             print(tok, end=" ", flush=True)
-            if i == 2:        # h1 is mid-decode: h2 joins its batch
-                h2 = eng.generate(rng.randint(0, cfg.vocab_size, (9,)))
+            if i == 2:        # h1 mid-decode: a 28-token prompt joins the
+                h2 = eng.generate(        # bucket-32 lane, prefilling in
+                    rng.randint(0, cfg.vocab_size, (28,)))   # 8-tok chunks
         print()
         r1, r2 = h1.result(600), h2.result(600)
         for name, r in (("h1", r1), ("h2", r2)):
@@ -53,8 +58,13 @@ def decoder_demo():
                   f"{t.decode_s * 1e3:.0f}ms")
         m = eng.metrics()
         print(f"mid-decode joins: {m['joins_mid_flight']} | segments: "
-              f"{m['decode_segments']} | mean occupancy: "
+              f"{m['decode_segments']} | prefill chunks: "
+              f"{m['prefill_chunks']} | mean occupancy: "
               f"{m['batch_occupancy_mean']:.2f}")
+        for bucket, lane in sorted(m["lanes"].items()):
+            print(f"lane {bucket}: segments={lane['decode_segments']} "
+                  f"tier_hist={lane['tier_hist']} "
+                  f"compact_segments={lane['compact_segments']}")
     finally:
         eng.close()
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -42,16 +42,13 @@ def run_ladder(engine, sentences: Sequence[np.ndarray], *,
     rng = np.random.default_rng(rng_seed)
     if warmup:  # exclude jit compilation from the first ladder cell
         engine.submit(sentences[0]).result(timeout=600)
-        engine.latencies.clear()
-        engine.batch_sizes.clear()
-        # timings too: cumulative metrics() phase means (queue/prefill/
-        # decode) would otherwise still include the compile-laden warmup
-        engine.timings.clear()
-        # re-sync the engine's window() cursors with the truncated lists
-        # (a stale cursor would silently hide post-clear samples)
-        win = getattr(engine, "window", None)
-        if win is not None:
-            win()
+        # drop the compile-laden warmup samples (wall latencies, batch
+        # sizes, phase timings) and re-sync the window cursor — one
+        # engine-owned definition of "discard", shared with the
+        # deploy-lab factory and the benches
+        discard = getattr(engine, "discard_samples", None)
+        if discard is not None:
+            discard()
     cells = []
     for ns in ladder:
         lats = []
@@ -106,6 +103,11 @@ class StaggeredResult:
     prefill_mean_s: float = 0.0
     decode_mean_s: float = 0.0
     queue_p95_s: float = 0.0      # the head-of-line tail specifically
+    # per-request GenerationResults, request-arrival order — only kept
+    # when run_staggered(keep_results=True): lets per-class analyses
+    # (e.g. bench_segment_width's long-request split) reuse this runner
+    # instead of re-implementing the open-loop arrival logic
+    results: Optional[List] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -113,7 +115,8 @@ class StaggeredResult:
 
 
 def run_staggered(engine, prompts: Sequence[np.ndarray], *, gap_s: float,
-                  sampling=None, timeout: float = 600) -> StaggeredResult:
+                  sampling=None, timeout: float = 600,
+                  keep_results: bool = False) -> StaggeredResult:
     """Fire one generation request every ``gap_s`` seconds (open-loop
     arrivals, vs the ladder's closed-loop bursts) and measure per-request
     completion latency — the workload where step-level continuous batching
@@ -130,13 +133,14 @@ def run_staggered(engine, prompts: Sequence[np.ndarray], *, gap_s: float,
         handles.append(engine.generate(p, per_req[i]))
         if i + 1 < len(prompts):
             time.sleep(gap_s)
-    lats, total_tokens, timings = [], 0, []
+    lats, total_tokens, timings, results = [], 0, [], []
     for h in handles:
         res = h.result(timeout=timeout)
         # per-request completion relative to ITS arrival, not the burst's
         lats.append(res.timing.total_s)
         timings.append(res.timing)
         total_tokens += len(res.tokens)
+        results.append(res)
     wall = time.perf_counter() - t0
     return StaggeredResult(
         n_requests=len(prompts), gap_s=gap_s,
@@ -146,7 +150,8 @@ def run_staggered(engine, prompts: Sequence[np.ndarray], *, gap_s: float,
         queue_mean_s=float(np.mean([t.queue_s for t in timings])),
         prefill_mean_s=float(np.mean([t.prefill_s for t in timings])),
         decode_mean_s=float(np.mean([t.decode_s for t in timings])),
-        queue_p95_s=float(np.percentile([t.queue_s for t in timings], 95)))
+        queue_p95_s=float(np.percentile([t.queue_s for t in timings], 95)),
+        results=results if keep_results else None)
 
 
 def format_table(cells: List[LoadCell]) -> str:

@@ -77,7 +77,8 @@ class ExperimentRecord:
     """One (profile x scenario) measurement — one JSONL row."""
     profile: dict              # EnvironmentProfile.spec_dict()
     scenario: dict             # WorkloadScenario.to_dict()
-    engine: dict               # mode / max_batch / continuous / buckets
+    engine: dict               # mode / max_batch / continuous / buckets /
+    #                            segment_width (see docs/DEPLOY_LAB.md)
     cells: List[dict]          # per-NS ladder cells or one staggered cell
     telemetry: dict            # TelemetryTimeline.summary() of the window
     engine_window: dict        # engine.window() for the run
@@ -211,7 +212,8 @@ def _engine_summary(engine) -> dict:
     return {"mode": ec.mode, "max_batch": ec.max_batch,
             "pad_buckets": list(ec.pad_buckets),
             "continuous": bool(engine.continuous_active),
-            "max_new_tokens": ec.max_new_tokens}
+            "max_new_tokens": ec.max_new_tokens,
+            "segment_width": ec.segment_width}
 
 
 def write_jsonl(records: Iterable[ExperimentRecord], path: str) -> None:

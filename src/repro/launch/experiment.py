@@ -51,7 +51,9 @@ def make_engine_factory(args):
         params = init_params(cfg, jax.random.PRNGKey(0))
         # decoder scenarios serve the mixed-length traffic the paper's
         # corpus actually has: prompts alternating two pad buckets through
-        # the multi-lane scheduler, long prompts prefilling in chunks
+        # the multi-lane scheduler, long prompts prefilling in chunks,
+        # decode segments compacted to lane occupancy (--segment-width
+        # fixed keeps the full-width A/B baseline)
         buckets = ((args.bucket // 2, args.bucket) if decoder
                    else (args.bucket,))
         eng = ServingEngine(cfg, params, EngineConfig(
@@ -59,7 +61,8 @@ def make_engine_factory(args):
             pad_buckets=buckets,
             max_new_tokens=scenario.max_new_tokens,
             max_inflight=args.max_inflight,
-            prefill_chunk=max(args.bucket // 4, 8) if decoder else None))
+            prefill_chunk=max(args.bucket // 4, 8) if decoder else None,
+            segment_width=args.segment_width))
         if decoder:
             sentences = mixed_bucket_prompts(buckets, 64, cfg.vocab_size,
                                              rng_seed=args.seed)
@@ -73,6 +76,18 @@ def make_engine_factory(args):
         # profile's measured window (the grid's first row would otherwise
         # carry seconds of compile latency the later rows don't)
         eng.warmup()
+        if decoder:
+            # warmup() primes the jit caches but serves no traffic; the
+            # first real requests still pay a residual warm-in the
+            # jit_compiles counter cannot see (lazy staging-pool allocs,
+            # thread pools — measured ~20x on the first staggered row,
+            # pre-existing). Absorb it with one short + one chunk-
+            # prefilled request, then clear the samples they left, as
+            # run_ladder(warmup=True) does for ladder cells.
+            for p in (sentences[0], max(sentences[:4], key=len)):
+                eng.generate(p, SamplingParams(max_new_tokens=2)
+                             ).result(timeout=600)
+            eng.discard_samples()
         sampling = (SamplingParams(max_new_tokens=scenario.max_new_tokens)
                     if scenario.mode == "decoder" else None)
         return eng, sentences, sampling
@@ -115,6 +130,12 @@ def main(argv=None) -> None:
     ap.add_argument("--max-inflight", type=int, default=None)
     ap.add_argument("--bucket", type=int, default=32,
                     help="pad bucket (and prompt-length ceiling)")
+    ap.add_argument("--segment-width", default="adaptive",
+                    choices=("adaptive", "fixed"),
+                    help="decoder decode-segment widths: occupancy-"
+                         "adaptive tiers (default) or the fixed "
+                         "max_batch-wide A/B baseline — so the grid "
+                         "measures the tier effect (docs/DEPLOY_LAB.md)")
     ap.add_argument("--target-ns", type=int, default=None,
                     help="NS for the cheapest-SLO question (default: the "
                          "largest ladder cell actually run)")

@@ -398,6 +398,18 @@ def decode_segment(cfg, params, tokens, positions, caches, *, n_steps: int,
     short segments and, between segments, swaps finished rows for newly
     admitted ones (prefill-into-slot) — step-granularity continuous batching.
 
+    The entry point is **width-polymorphic**: every array argument shares
+    one leading batch axis B, nothing in the body depends on its value, and
+    under jit each distinct B is simply one compiled specialization. Rows
+    are fully independent — no cross-row reduction touches the batch axis —
+    so the tokens a row produces are a function of its own (cache, state)
+    only, not of B or of which rows ride along. That is the contract the
+    occupancy-adaptive scheduler builds on: it compacts the live rows of a
+    ``CachePool`` into the smallest width tier that fits them (see
+    ``serving.scheduler.width_tiers``), runs this same function at that
+    width, and scatters the results home, token-identically to the
+    full-width call.
+
     tokens (B, 1) int32: the token each row just generated; positions
     (B, 1) int32: the absolute position that token occupies (its KV is
     written there). active (B,) bool: rows that should decode (inactive rows

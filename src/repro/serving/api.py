@@ -84,10 +84,24 @@ class SamplingParams:
 
 @dataclasses.dataclass(frozen=True)
 class GenerationRequest:
-    """A typed generation request: prompt tokens + how to decode them."""
+    """A typed generation request: prompt tokens + how to decode them.
+
+    tokens: 1-D int32 prompt ids. Must be non-empty and fit the engine's
+        largest pad bucket (otherwise the handle resolves with
+        ``ValueError`` / ``RequestTooLong`` — ``generate()`` itself never
+        raises mid-burst).
+    sampling: per-request ``SamplingParams`` (budget, stop token,
+        temperature/top-k/seed); the default decodes greedily to the
+        engine's ``max_new_tokens``.
+    priority: admission order — higher-priority requests are admitted
+        (and un-parked from the admission overflow queue) first; FIFO
+        within a level. Does not preempt requests already decoding.
+    request_id: optional caller tag, echoed on ``GenerationResult`` —
+        the engine never interprets it.
+    """
     tokens: np.ndarray
     sampling: SamplingParams = SamplingParams()
-    priority: int = 0                 # higher admits first
+    priority: int = 0
     request_id: Optional[str] = None
 
 
@@ -108,8 +122,16 @@ class RequestTiming:
 
 @dataclasses.dataclass(frozen=True)
 class GenerationResult:
-    """tokens: generated ids (eos included when finish_reason == 'eos');
-    finish_reason: 'length' | 'eos' | 'cancelled'."""
+    """What a finished request resolves to (``handle.result()``).
+
+    tokens: generated ids, prompt excluded (the eos token is included
+        when ``finish_reason == 'eos'``; a cancelled request keeps the
+        tokens it produced before the cancel took effect).
+    finish_reason: ``'length'`` (budget exhausted) | ``'eos'`` |
+        ``'cancelled'``.
+    timing: the per-phase ``RequestTiming`` breakdown.
+    request_id: echoed from the ``GenerationRequest``.
+    """
     tokens: np.ndarray
     finish_reason: str
     timing: RequestTiming

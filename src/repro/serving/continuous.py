@@ -38,11 +38,24 @@ it needs anyway to stream tokens) the worker:
 
 ``EngineConfig.multi_lane=False`` keeps the legacy single-set admission
 gate (one bucket serves until it drains) for A/B runs — the
-``bench_multi_bucket`` baseline. Inactive slots still cost compute (each
-lane's segment runs its full slot batch; static shapes keep it one
-compiled function per bucket) but correctness never depends on occupancy.
+``bench_multi_bucket`` baseline.
+
+Decode segments are **occupancy-adaptive** (the fixed-width follow-on the
+ROADMAP tracked): before each segment the scheduler picks the smallest
+width tier (powers of two up to ``max_batch`` — ``scheduler.width_tiers``)
+that fits the lane's live rows, compacts those rows' KV slots and decode
+state into a tier-width view (``CachePool.compact_view`` — one fused
+gather), runs ``models.decode_segment`` at that width, and scatters the
+results back to the home slots (``CachePool.scatter_back`` — padding rows
+are dropped, so untouched slots stay bitwise identical). A lane whose one
+long request decodes alone thus pays a width-1-or-2 segment, not
+``max_batch``. ``EngineConfig.segment_width='fixed'`` keeps the
+always-full-width segment as the A/B baseline (``bench_segment_width``);
+either way correctness never depends on occupancy, and each tier is one
+compiled function per bucket (primed by ``engine.warmup()``).
 Per-segment occupancy lands in ``engine.batch_sizes`` and per-lane
-segment/occupancy/join/chunk counters in ``engine.metrics()['lanes']``.
+segment/occupancy/join/chunk/compaction counters plus the segment-width
+``tier_hist`` in ``engine.metrics()['lanes']``.
 """
 from __future__ import annotations
 
@@ -57,7 +70,7 @@ import numpy as np
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationResult, RequestTiming)
 from repro.serving.kvcache import CachePool
-from repro.serving.scheduler import LaneQueue
+from repro.serving.scheduler import LaneQueue, pick_tier
 
 
 @dataclasses.dataclass(eq=False)     # identity semantics: list.remove /
@@ -421,6 +434,46 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------ decode steps
     def _segment(self, lane: _Lane) -> None:
+        """One decode segment for a lane, at the smallest width tier that
+        fits its live occupancy (``segment_width='adaptive'``; 'fixed'
+        degenerates the ladder to ``max_batch`` and always takes the
+        full-width path). Both paths return per-row results aligned with
+        ``slots``; the retire loop below is shared."""
+        eng = self.eng
+        occ = len(lane.rows)
+        width = pick_tier(occ, eng._tiers)
+        stat = eng._lane_stat(lane.bucket)
+        if width >= eng.ec.max_batch:
+            width = eng.ec.max_batch
+            slots, toks, emits, st_active, st_eos = self._segment_full(lane)
+        else:
+            slots, toks, emits, st_active, st_eos = \
+                self._segment_compact(lane, width)
+            stat["compact_segments"] += 1
+        eng.batch_sizes.append(occ)              # per-segment occupancy
+        eng._stats["decode_segments"] += 1
+        stat["decode_segments"] += 1
+        stat["occupancy_sum"] += occ
+        stat["tier_hist"][width] += 1    # key pre-created per tier
+        #                                  (metrics() iterates lock-free)
+        now = time.perf_counter()
+        pool = lane.pool
+        for j, s in enumerate(slots):
+            row = lane.rows[s]
+            new = toks[j][emits[j]].tolist()
+            row.toks.extend(new)
+            row.req.handle._push(new)
+            pool.lengths[s] = int(lane.pos[s]) + 1
+            if not st_active[j]:
+                self._finish(lane, row,
+                             FINISH_EOS if st_eos[j] else FINISH_LENGTH, now)
+            elif row.req.handle.cancel_requested:
+                self._finish(lane, row, FINISH_CANCELLED, now)
+
+    def _segment_full(self, lane: _Lane):
+        """Full-width segment over every pool slot (live rows plus inert
+        free/prefilling slots) — today's fixed-width path, and the adaptive
+        path's top tier. The pool caches are donated and swapped whole."""
         eng = self.eng
         pool = lane.pool
         any_sample = any(lane.temp[s] > 0 for s in lane.rows)
@@ -440,22 +493,46 @@ class ContinuousScheduler:
         lane.pos = np.asarray(state["pos"])[:, 0].copy()
         lane.budget = np.asarray(state["budget"]).copy()
         lane.active = st_active.copy()
-        eng.batch_sizes.append(len(lane.rows))   # per-segment occupancy
-        eng._stats["decode_segments"] += 1
-        stat = eng._lane_stat(lane.bucket)
-        stat["decode_segments"] += 1
-        stat["occupancy_sum"] += len(lane.rows)
-        now = time.perf_counter()
-        for s, row in list(lane.rows.items()):
-            new = toks[s][emits[s]].tolist()
-            row.toks.extend(new)
-            row.req.handle._push(new)
-            pool.lengths[s] = int(lane.pos[s]) + 1
-            if not st_active[s]:
-                self._finish(lane, row,
-                             FINISH_EOS if st_eos[s] else FINISH_LENGTH, now)
-            elif row.req.handle.cancel_requested:
-                self._finish(lane, row, FINISH_CANCELLED, now)
+        slots = list(lane.rows)
+        return (slots, toks[slots], emits[slots], st_active[slots],
+                st_eos[slots])
+
+    def _segment_compact(self, lane: _Lane, width: int):
+        """Compacted segment: gather the live rows (and their decode
+        state) into a ``width``-row view, decode at that width, scatter
+        the live prefix back to the home slots. View rows past the
+        occupancy are duplicates of ``slots[0]`` that ride along inactive
+        and are never scattered back, so pool slots outside ``slots`` —
+        free, prefilling, or mid-retire — keep their KV and state bitwise
+        (tested as a round-trip property)."""
+        eng = self.eng
+        pool = lane.pool
+        slots = sorted(lane.rows)         # deterministic gather order
+        occ = len(slots)
+        # idx is the view's gather order (slots + padding duplicates);
+        # state rows are gathered by the same idx so row j of the state
+        # always describes row j of the cache view
+        idx, view = pool.compact_view(slots, width)
+        act = lane.active[idx].copy()
+        act[occ:] = False                 # padding rows are inert
+        any_sample = any(lane.temp[s] > 0 for s in slots)
+        sargs = ((jnp.asarray(lane.temp[idx]), jnp.asarray(lane.topk[idx]),
+                  jnp.asarray(lane.seed[idx])) if any_sample
+                 else (None, None, None))
+        toks, emits, state, caches = eng._segment_fn()(
+            eng.params, jnp.asarray(lane.last_tok[idx][:, None]),
+            jnp.asarray(lane.pos[idx][:, None]), view,
+            jnp.asarray(act), jnp.asarray(lane.budget[idx]),
+            jnp.asarray(lane.eos[idx]), *sargs)
+        pool.scatter_back(slots, caches)
+        toks, emits = np.asarray(toks)[:occ], np.asarray(emits)[:occ]
+        st_active = np.asarray(state["active"])[:occ]
+        st_eos = np.asarray(state["eos_hit"])[:occ]
+        lane.last_tok[slots] = np.asarray(state["tok"])[:occ, 0]
+        lane.pos[slots] = np.asarray(state["pos"])[:occ, 0]
+        lane.budget[slots] = np.asarray(state["budget"])[:occ]
+        lane.active[slots] = st_active
+        return slots, toks, emits, st_active, st_eos
 
     # ------------------------------------------------------------ retire
     def _resolve(self, r, toks, reason: str, now: float) -> None:

@@ -52,7 +52,8 @@ from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                RequestHandle, RequestTiming, SamplingParams)
 from repro.serving import kvcache
 from repro.serving.kvcache import CachePool, _take_slots
-from repro.serving.scheduler import AdmissionQueue, RequestQueue
+from repro.serving.scheduler import (AdmissionQueue, RequestQueue,
+                                     pick_tier, width_tiers)
 
 
 class RequestTooLong(ValueError):
@@ -85,6 +86,12 @@ class EngineConfig:
     # instead of stalling every in-flight row for the whole prompt's
     # forward. None = whole-prompt prefill (token-identical either way).
     prefill_chunk: Optional[int] = None
+    # occupancy-adaptive decode segments: 'adaptive' compacts each lane's
+    # live rows into the smallest width tier (powers of two up to
+    # max_batch) before every segment, so a lane at occupancy 1 decodes at
+    # width 1 instead of max_batch; 'fixed' keeps the full-width segment,
+    # the A/B baseline (bench_segment_width). Token-identical either way.
+    segment_width: str = "adaptive"
 
 
 @dataclasses.dataclass
@@ -158,6 +165,15 @@ class ServingEngine:
         self.continuous_active = (
             engine_cfg.mode == "decoder" and engine_cfg.continuous
             and engine_cfg.use_scan_decode and engine_cfg.use_cache_pool)
+        if engine_cfg.segment_width not in ("adaptive", "fixed"):
+            raise ValueError(
+                f"segment_width must be 'adaptive' or 'fixed', got "
+                f"{engine_cfg.segment_width!r}")
+        # the width ladder compacted segments may run at (see scheduler.
+        # width_tiers); 'fixed' degenerates to the max_batch-only ladder
+        self._tiers = (width_tiers(engine_cfg.max_batch)
+                       if engine_cfg.segment_width == "adaptive"
+                       else (engine_cfg.max_batch,))
         C = engine_cfg.prefill_chunk
         if self.continuous_active and C is not None:
             if C < 1:
@@ -351,7 +367,11 @@ class ServingEngine:
         (bucket, size) through the serve path; the continuous decoder
         primes each bucket's prefill-into-slot join sizes, its chunked-
         prefill shapes (when ``prefill_chunk`` is set) and its decode
-        segment directly against the bucket's pool — deterministic, unlike
+        segment directly against the bucket's pool — with
+        ``segment_width='adaptive'``, the segment is primed per (bucket x
+        width tier), plus the compact-gather and scatter-back variants
+        each occupancy in ``batch_sizes`` maps to, so tier switches
+        mid-serve stay compile-clean — deterministic, unlike
         a burst of real requests whose join sizes depend on timing, and
         without adding request samples to ``metrics()``. It must run
         before serving traffic (it touches the pools the worker uses;
@@ -378,9 +398,13 @@ class ServingEngine:
     def _warmup_continuous(self, buckets, sizes) -> None:
         """Prime the continuous scheduler's jitted shapes per bucket:
         prefill-into-slot per join size (gather acquire, as the scheduler
-        uses), prefill chunks per fill-batch size, and the full-slot decode
+        uses), prefill chunks per fill-batch size, the full-slot decode
         segment (donating and swapping the pool caches exactly as a live
-        segment does)."""
+        segment does), and — under ``segment_width='adaptive'`` — one
+        compact-gather -> tier-width segment -> scatter-back cycle per
+        occupancy in ``sizes``, compiling exactly the variants those
+        occupancies map to (gather and segment specialize per tier,
+        scatter-back per (tier, occupancy))."""
         if (self.latencies or not self._q.empty()
                 or any(l.busy for l in self._scheduler.lanes.values())):
             # the worker would race these direct pool mutations (both
@@ -424,6 +448,31 @@ class ServingEngine:
                 jnp.full((n,), -1, jnp.int32), None, None, None)
             pool.caches = caches
             jax.block_until_ready(toks)
+            for occ in sizes:        # compacted segments per width tier
+                width = pick_tier(occ, self._tiers)
+                if width >= n:       # occupancy maps to the full segment
+                    continue
+                slots = list(range(occ))
+                _, view = pool.compact_view(slots, width)
+                toks, _, _, seg = self._segment_fn()(
+                    self.params, jnp.zeros((width, 1), jnp.int32),
+                    jnp.zeros((width, 1), jnp.int32), view,
+                    jnp.zeros((width,), bool), jnp.ones((width,), jnp.int32),
+                    jnp.full((width,), -1, jnp.int32), None, None, None)
+                pool.scatter_back(slots, seg)
+                jax.block_until_ready(toks)
+
+    def discard_samples(self) -> None:
+        """Drop the accumulated per-request samples (wall latencies, batch
+        sizes, phase timings) and re-sync the ``window()`` cursor — the
+        one way to discard warmup traffic so later ``metrics()`` /
+        ``window()`` spans cover only measured requests. Counters
+        (segments, joins, compiles, lane stats) are cumulative by design
+        and are not touched; attribute those via ``window()``."""
+        self.latencies.clear()
+        self.batch_sizes.clear()
+        self.timings.clear()
+        self.window()
 
     def close(self):
         self._stop.set()
@@ -751,7 +800,14 @@ class ServingEngine:
         if stat is None:
             stat = self.lane_stats[bucket] = {
                 "decode_segments": 0, "occupancy_sum": 0, "joins": 0,
-                "prefill_chunks": 0}
+                "prefill_chunks": 0, "compact_segments": 0,
+                # segment width -> segments run at it. Every tier is
+                # pre-created (like the outer key set) so the worker only
+                # mutates values — metrics() iterates these dicts from
+                # client threads without a lock; a lazily inserted key
+                # would fault that iteration. Zero counts are dropped
+                # from the reported view.
+                "tier_hist": {w: 0 for w in self._tiers}}
         return stat
 
     def _jit_compiles(self) -> int:
@@ -766,7 +822,7 @@ class ServingEngine:
         # snapshot: the worker inserts newly built fns concurrently
         pool_fns = (kvcache._reset_slots, kvcache._reset_and_view,
                     kvcache._reset_and_view_run, kvcache._take_slots,
-                    kvcache._write_slots)
+                    kvcache._write_slots, kvcache._scatter_prefix)
         for fn in list(self._compiled.values()) + list(pool_fns):
             fns = fn if isinstance(fn, tuple) else (fn,)
             for f in fns:
@@ -778,11 +834,20 @@ class ServingEngine:
     @staticmethod
     def _lane_view(now: dict, prev: Optional[dict] = None) -> dict:
         """Lane counter dicts (optionally diffed against a window cursor)
-        with the occupancy mean derived per span."""
+        with the occupancy mean derived per span. Dict-valued counters
+        (the segment-width ``tier_hist``) diff per key, dropping keys that
+        did not move — a window's histogram covers only its span."""
         out = {}
         for bucket, stat in now.items():
             base = (prev or {}).get(bucket, {})
-            d = {k: v - base.get(k, 0) for k, v in stat.items()}
+            d = {}
+            for k, v in stat.items():
+                if isinstance(v, dict):
+                    sub = base.get(k, {})
+                    d[k] = {w: c - sub.get(w, 0) for w, c in v.items()
+                            if c - sub.get(w, 0)}
+                else:
+                    d[k] = v - base.get(k, 0)
             segs = d.get("decode_segments", 0)
             d["occupancy_mean"] = (d.pop("occupancy_sum", 0) / segs
                                    if segs else 0.0)
@@ -821,9 +886,11 @@ class ServingEngine:
         requests the latency percentiles are None (never fabricated from a
         zero sample). Continuous engines additionally report per-lane
         counters under ``'lanes'`` (bucket -> segments / occupancy mean /
-        joins / prefill chunks) and ``'jit_compiles'`` (compiled engine
-        specializations so far). ``window()`` gives the same shape for the
-        span since the previous ``window()`` call."""
+        joins / prefill chunks / compacted-segment count / ``tier_hist``,
+        the histogram of decode-segment widths the lane actually ran) and
+        ``'jit_compiles'`` (compiled engine specializations so far).
+        ``window()`` gives the same shape for the span since the previous
+        ``window()`` call."""
         m = self._aggregate(self.latencies, self.batch_sizes, self.timings,
                             self._stats)
         if self.continuous_active:
@@ -848,7 +915,10 @@ class ServingEngine:
         i_lat, i_bs, i_tim = (len(self.latencies), len(self.batch_sizes),
                               len(self.timings))
         stats_now = dict(self._stats)
-        lanes_now = {b: dict(s) for b, s in self.lane_stats.items()}
+        # per-key copy: tier_hist is a nested dict the scheduler mutates
+        lanes_now = {b: {k: (dict(v) if isinstance(v, dict) else v)
+                         for k, v in s.items()}
+                     for b, s in self.lane_stats.items()}
 
         def span(lst, start, stop):
             return lst[start if start <= stop else 0:stop]

@@ -8,7 +8,11 @@ reusable without reallocating device buffers. ``assign_many`` resets a whole
 batch of slots in one fused device call (vs one ``make_caches`` allocation
 sweep per batch — the per-batch tax the engine used to pay), and
 ``batch_view``/``write_back`` give the engine a contiguous batch-sized view
-of the assigned slots.
+of the assigned slots, and ``compact_view``/``scatter_back`` the
+tier-width view the occupancy-adaptive decode segment runs on: gather the
+live slots (padded to the tier with inert duplicates), decode at that
+width, scatter only the live prefix back — slots outside the compact set
+are never written.
 """
 from __future__ import annotations
 
@@ -74,6 +78,21 @@ def _take_slots(caches, idx):
     chunked prefill gathers its fill batch's staged slots every chunk, at
     arbitrary (fragmenting) offsets."""
     return jax.tree.map(lambda x: jnp.take(x, idx, axis=1), caches)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _scatter_prefix(caches, batch, idx):
+    """Scatter the first ``len(idx)`` rows of a (possibly wider) batch view
+    back into pool slots ``idx`` — the compacted decode segment's
+    write-back. The view may carry padding rows beyond the prefix (the
+    occupancy-to-tier round-up); they are never written, so pool slots
+    outside ``idx`` stay bitwise untouched. Specializes per
+    (view width, slot count); the pool is donated so the scatter updates
+    in place."""
+    n = idx.shape[0]
+    return jax.tree.map(
+        lambda x, b: x.at[:, idx].set(jax.lax.slice_in_dim(b, 0, n, axis=1)),
+        caches, batch)
 
 
 class CachePool:
@@ -170,6 +189,38 @@ class CachePool:
                 lambda x: jax.lax.slice_in_dim(x, lo, lo + n, axis=1),
                 self.caches)
         return _take_slots(self.caches, jnp.asarray(slots, jnp.int32))
+
+    # ------------------------------------------- compacted decode segments
+    def compact_view(self, slots: Sequence[int], width: int):
+        """Tier-width cache view for a compacted decode segment: rows
+        0..len(slots)-1 are the given slots (the live rows, in order); rows
+        beyond are padding — duplicates of ``slots[0]`` that ride along
+        inactive and are dropped by ``scatter_back``. Returns
+        ``(idx, view)``: ``idx`` is the width-length gather order the view
+        was built with, and callers must gather their per-row state by the
+        same order — taking it from here (instead of re-deriving the
+        padding convention) keeps cache rows and state rows structurally
+        aligned. Always the fused ``_take_slots`` gather (never the
+        contiguous-slice fast path), so jit specializes on ``width``
+        alone: one compiled variant per tier, not per slot arrangement."""
+        slots = list(slots)
+        if not 0 < len(slots) <= width:
+            raise ValueError(f"{len(slots)} slots do not fit width {width}")
+        idx = slots + [slots[0]] * (width - len(slots))
+        return idx, _take_slots(self.caches, jnp.asarray(idx, jnp.int32))
+
+    def scatter_back(self, slots: Sequence[int], batch_caches,
+                     lengths: Optional[Sequence[int]] = None) -> None:
+        """Write a compacted segment's result back to the home slots: only
+        the first ``len(slots)`` view rows land (padding rows are sliced
+        away in-graph), so every slot outside ``slots`` — free, prefilling,
+        or retired — keeps its KV bitwise. The counterpart of
+        ``compact_view``; ``write_back`` stays the whole-view path."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        self.caches = _scatter_prefix(self.caches, batch_caches, idx)
+        if lengths is not None:
+            for s, n in zip(slots, lengths):
+                self.lengths[s] = int(n)
 
     def write_back(self, slots: Sequence[int], batch_caches,
                    lengths: Optional[Sequence[int]] = None) -> None:

@@ -16,7 +16,34 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Sequence, Tuple
+
+
+# --------------------------------------------------- segment-width policy
+def width_tiers(max_batch: int) -> Tuple[int, ...]:
+    """The ladder of decode-segment widths a lane may run: powers of two
+    up to (and always including) ``max_batch`` — e.g. 8 -> (1, 2, 4, 8),
+    6 -> (1, 2, 4, 6). Each tier is one compiled ``decode_segment``
+    specialization, so the ladder bounds compile count at
+    O(log max_batch) while keeping batch waste under 2x of occupancy."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    tiers = []
+    w = 1
+    while w < max_batch:
+        tiers.append(w)
+        w *= 2
+    tiers.append(max_batch)
+    return tuple(tiers)
+
+
+def pick_tier(occupancy: int, tiers: Sequence[int]) -> int:
+    """Smallest tier that fits ``occupancy`` live rows (the width the
+    scheduler compacts the next decode segment to)."""
+    for w in tiers:
+        if occupancy <= w:
+            return w
+    return tiers[-1]
 
 
 class RequestQueue:

@@ -1,0 +1,237 @@
+"""Occupancy-adaptive decode-segment widths (lane width tiers).
+
+The scheduler compacts each lane's live rows into the smallest power-of-two
+width tier before every decode segment (``segment_width='adaptive'``, the
+default) instead of always decoding all ``max_batch`` slots. These tests
+pin the tier policy, the token identity of adaptive vs fixed vs
+batch-at-a-time, the compaction round-trip property (slots outside the
+compact set stay bitwise untouched), and the metrics surfaces the tiers
+added: per-lane ``tier_hist`` / ``compact_segments`` in ``metrics()`` and
+``window()``, compile-clean windows after ``warmup()`` under both modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.loadtest import mixed_bucket_prompts
+from repro.models import decode_segment, init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.kvcache import CachePool
+from repro.serving.scheduler import pick_tier, width_tiers
+
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+RNG = np.random.RandomState(31)
+
+
+def _engine(**kw):
+    base = dict(mode="decoder", max_batch=4, max_new_tokens=6,
+                pad_buckets=(16, 32), decode_segment=2)
+    base.update(kw)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base))
+
+
+def _prompt(n):
+    return RNG.randint(0, CFG.vocab_size, (n,))
+
+
+# ------------------------------------------------------------- tier policy
+def test_width_tiers_ladder():
+    assert width_tiers(1) == (1,)
+    assert width_tiers(8) == (1, 2, 4, 8)
+    assert width_tiers(6) == (1, 2, 4, 6)   # max_batch always included
+    with pytest.raises(ValueError):
+        width_tiers(0)
+
+
+def test_pick_tier_smallest_fit():
+    tiers = width_tiers(8)
+    assert [pick_tier(o, tiers) for o in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+    assert pick_tier(99, tiers) == 8        # clamped to the top tier
+
+
+def test_segment_width_value_validated():
+    with pytest.raises(ValueError, match="segment_width"):
+        _engine(segment_width="auto")
+
+
+# ---------------------------------------------------------- token identity
+def test_adaptive_matches_fixed_and_batch_greedy():
+    """Acceptance: compacting segments to occupancy tiers must not change
+    a single token vs the full-width scheduler or batch-at-a-time."""
+    prompts = [_prompt(n) for n in (27, 9, 14, 30)]
+    outs = {}
+    for name, kw in (("fixed", dict(segment_width="fixed")),
+                     ("adaptive", dict(segment_width="adaptive")),
+                     ("batch", dict(continuous=False))):
+        eng = _engine(**kw)
+        try:
+            hs = [eng.generate(p) for p in prompts]
+            outs[name] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for name in ("adaptive", "batch"):
+        for a, b in zip(outs["fixed"], outs[name]):
+            assert (a == b).all(), name
+
+
+def test_adaptive_with_chunked_prefill_and_sampling():
+    """Compaction composes with the other serving features: a chunk-
+    prefilled join and a seeded sampled request produce the same tokens
+    under adaptive and fixed widths (sampling is counter-based per
+    (seed, position), so width must not matter)."""
+    prompts = [_prompt(30), _prompt(8)]
+    sampling = [SamplingParams(),
+                SamplingParams(temperature=0.8, top_k=16, seed=5)]
+    outs = {}
+    for mode in ("fixed", "adaptive"):
+        eng = _engine(prefill_chunk=8, segment_width=mode)
+        try:
+            hs = [eng.generate(p, s) for p, s in zip(prompts, sampling)]
+            outs[mode] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for a, b in zip(outs["fixed"], outs["adaptive"]):
+        assert (a == b).all()
+
+
+# ------------------------------------------------- compaction round-trip
+@settings(deadline=None, max_examples=6)
+@given(mask=st.integers(1, 2 ** 4 - 1), seed=st.integers(0, 50))
+def test_compact_round_trip_leaves_other_slots_untouched(mask, seed):
+    """Property: compact-gather -> decode segment -> scatter-back touches
+    exactly the compacted slots. Every other slot's KV stays *bitwise*
+    identical (padding rows are sliced away before the scatter), and the
+    pool's slot bookkeeping is not disturbed."""
+    slots = [i for i in range(4) if mask >> i & 1]
+    width = pick_tier(len(slots), width_tiers(4))
+    pool = CachePool(CFG, 4, 24, dtype=jnp.float32)
+    # randomize float leaves so "untouched" is a real statement
+    leaves, treedef = jax.tree.flatten(pool.caches)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    pool.caches = jax.tree.unflatten(treedef, [
+        (jax.random.normal(k, l.shape, l.dtype)
+         if jnp.issubdtype(l.dtype, jnp.floating) else l)
+        for k, l in zip(keys, leaves)])
+    before = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    lengths_before = list(pool.lengths)
+    occ = len(slots)
+    idx, view = pool.compact_view(slots, width)
+    assert idx[:occ] == slots and len(idx) == width
+    _, _, _, out = decode_segment(
+        CFG, PARAMS, jnp.zeros((width, 1), jnp.int32),
+        jnp.full((width, 1), 3, jnp.int32), view, n_steps=2,
+        active=jnp.arange(width) < occ,
+        budget=jnp.full((width,), 5, jnp.int32))
+    pool.scatter_back(slots, out)
+    after = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    others = [i for i in range(4) if i not in slots]
+    changed = False
+    for b, a in zip(before, after):
+        assert (b[:, others] == a[:, others]).all()
+        if not np.array_equal(b[:, slots], a[:, slots]):
+            changed = True
+    assert changed                  # the live slots actually decoded
+    assert pool.lengths == lengths_before
+    assert pool.request_of == [None] * 4
+
+
+def test_compact_view_rejects_overfull():
+    pool = CachePool(CFG, 4, 24, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="width"):
+        pool.compact_view([0, 1, 2], 2)
+    with pytest.raises(ValueError, match="width"):
+        pool.compact_view([], 2)
+
+
+# --------------------------------------------------------- metrics surfaces
+def test_tier_hist_adaptive_lone_request_compacts():
+    """A lone request must decode at tier 1, never width max_batch — the
+    tentpole behavior — and the lane counters must say so."""
+    eng = _engine()
+    try:
+        eng.generate(_prompt(8)).result(timeout=300)
+        lanes = eng.metrics()["lanes"]
+        stat = lanes[16]
+        assert stat["decode_segments"] >= 1
+        assert stat["tier_hist"] == {1: stat["decode_segments"]}
+        assert stat["compact_segments"] == stat["decode_segments"]
+        assert lanes[32]["tier_hist"] == {}
+    finally:
+        eng.close()
+
+
+def test_tier_hist_fixed_mode_always_max_batch():
+    eng = _engine(segment_width="fixed")
+    try:
+        eng.generate(_prompt(8)).result(timeout=300)
+        stat = eng.metrics()["lanes"][16]
+        assert stat["tier_hist"] == {4: stat["decode_segments"]}
+        assert stat["compact_segments"] == 0
+    finally:
+        eng.close()
+
+
+@pytest.mark.parametrize("mode", ["adaptive", "fixed"])
+def test_window_tier_hist_and_compile_clean(mode):
+    """window() must diff the tier histogram / compaction counters per
+    span, and a warmed engine must serve mixed-bucket traffic without a
+    single jit compile — under both segment_width modes."""
+    eng = _engine(prefill_chunk=8, segment_width=mode)
+    try:
+        eng.warmup()
+        eng.window()                                  # reset the window
+        prompts = mixed_bucket_prompts((16, 32), 6, CFG.vocab_size,
+                                       rng_seed=3)
+        hs = [eng.generate(p) for p in prompts]
+        for h in hs:
+            h.result(timeout=300)
+        w = eng.window()
+        assert w["requests"] == 6
+        assert w["jit_compiles"] == 0                 # compile-clean span
+        for bucket in (16, 32):
+            stat = w["lanes"][bucket]
+            assert stat["decode_segments"] >= 1
+            assert sum(stat["tier_hist"].values()) == \
+                stat["decode_segments"]
+            if mode == "fixed":
+                assert set(stat["tier_hist"]) == {4}
+                assert stat["compact_segments"] == 0
+            else:
+                assert stat["compact_segments"] == sum(
+                    c for t, c in stat["tier_hist"].items() if t < 4)
+        # a second window diffs the histogram away
+        eng.generate(_prompt(8)).result(timeout=300)
+        w2 = eng.window()
+        assert w2["lanes"][32]["tier_hist"] == {}
+        assert sum(w2["lanes"][16]["tier_hist"].values()) == \
+            w2["lanes"][16]["decode_segments"]
+        # cumulative metrics keep the full histogram
+        m = eng.metrics()["lanes"][16]
+        assert sum(m["tier_hist"].values()) == m["decode_segments"]
+    finally:
+        eng.close()
+
+
+def test_adaptive_segments_track_occupancy_under_concurrency():
+    """Two concurrent requests in one lane run width-2 tiers while both
+    are live, width-1 after one retires — the histogram records the mix
+    (and batch_sizes keeps reporting true occupancy, not tier width)."""
+    eng = _engine(max_new_tokens=12, pad_buckets=(16,))
+    try:
+        eng.warmup(batch_sizes=[1, 2])
+        h1 = eng.generate(_prompt(6))                 # 12-token decode
+        next(iter(h1))                                # decode underway
+        h2 = eng.generate(_prompt(7), SamplingParams(max_new_tokens=2))
+        h1.result(timeout=300)
+        h2.result(timeout=300)
+        hist = eng.metrics()["lanes"][16]["tier_hist"]
+        assert hist.get(2, 0) >= 1                    # co-resident span
+        assert hist.get(1, 0) >= 1                    # lone-tail span
+        assert max(eng.batch_sizes) <= 2
+    finally:
+        eng.close()

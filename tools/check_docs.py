@@ -1,0 +1,88 @@
+"""Docs drift guard (CI `docs` job; also run by tests/test_docs.py).
+
+Two cheap checks that keep the docs from rotting as the code moves:
+
+  1. every relative markdown link in README.md, ROADMAP.md and docs/*.md
+     points at a path that exists in the repo;
+  2. every ``EngineConfig`` field name appears in docs/TUNING.md (the
+     knob-by-knob tuning guide must cover new knobs the moment they are
+     added).
+
+Pure stdlib (the EngineConfig fields are read via ``ast``, not import),
+so the CI job needs no jax. Exit code 0 = clean; 1 = drift, with one
+line per problem.
+
+  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+DOC_FILES = ("README.md", "ROADMAP.md")   # + every docs/*.md
+ENGINE_PY = Path("src/repro/serving/engine.py")
+TUNING_MD = Path("docs/TUNING.md")
+
+# [text](target) — markdown links, excluding images; target split at '#'
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def doc_paths(root: Path):
+    for name in DOC_FILES:
+        if (root / name).exists():
+            yield root / name
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check_links(root: Path) -> list:
+    """Relative markdown links must resolve (against the doc's directory,
+    like a reader clicking them would)."""
+    problems = []
+    for doc in doc_paths(root):
+        for target in _LINK.findall(doc.read_text()):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            if not (doc.parent / path).exists():
+                problems.append(f"{doc.relative_to(root)}: broken link "
+                                f"-> {target}")
+    return problems
+
+
+def engine_config_fields(root: Path) -> list:
+    """EngineConfig's dataclass field names, parsed without importing."""
+    tree = ast.parse((root / ENGINE_PY).read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EngineConfig":
+            return [s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+    raise AssertionError(f"EngineConfig not found in {ENGINE_PY}")
+
+
+def check_tuning_covers_config(root: Path) -> list:
+    tuning = (root / TUNING_MD).read_text()
+    return [f"{TUNING_MD}: EngineConfig field {name!r} is undocumented"
+            for name in engine_config_fields(root)
+            if not re.search(rf"`{re.escape(name)}`", tuning)]
+
+
+def main(argv=None) -> int:
+    root = Path((argv or sys.argv[1:] or ["."])[0]).resolve()
+    problems = check_links(root) + check_tuning_covers_config(root)
+    for p in problems:
+        print(f"docs-drift: {p}")
+    if not problems:
+        n_docs = len(list(doc_paths(root)))
+        n_fields = len(engine_config_fields(root))
+        print(f"docs clean: {n_docs} files link-checked, "
+              f"{n_fields} EngineConfig fields covered by {TUNING_MD}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
