@@ -489,6 +489,99 @@ def bench_segment_width() -> list:
              f"tokens_identical={identical}")]
 
 
+def bench_prefix_cache() -> list:
+    """Shared-prompt KV reuse: staggered streams that all resend one long
+    system prompt plus a short unique suffix — the traffic shape whose
+    prefill cost the prefix store amortizes — with ``prefix_cache`` off vs
+    on at the same offered load. A warm hit claims a lane slot, gathers the
+    stored KV into it in one fused load, and prefills only the suffix
+    chunk, so the warm-request prefill mean (every request after the first;
+    the first populates the store) is the quantity the store exists to cut.
+    derived = warm prefill mean + p95/tok_s; the on row adds its warm
+    prefill speedup, the lane hit/miss counters, a greedy token-identity
+    check against the off run, and the measured window's jit-compile count
+    (must be 0: warm hits at arbitrary matched offsets re-use the chunk
+    program, never specialize)."""
+    import jax
+    from repro.configs import get_config
+    from repro.core.loadtest import run_staggered
+    from repro.models import init_params
+    from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    BUCKET = 32 if SMOKE else 128
+    CHUNK = BUCKET // 4
+    T = 4 if SMOKE else 8
+    n_req = 6 if SMOKE else 12
+    rng = np.random.default_rng(11)
+    # system prompt fills 3/4 of the bucket; suffixes stay under one chunk
+    # so every warm request prefills exactly one chunk instead of the
+    # whole prompt
+    sysprompt = rng.integers(0, cfg.vocab_size, (BUCKET * 3 // 4,))
+    lo, hi = (2, 6) if SMOKE else (4, 12)
+    prompts = [np.concatenate([
+        sysprompt, rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(lo, hi + 1)),))])
+        for _ in range(n_req)]
+    sampling = [SamplingParams(max_new_tokens=T) for _ in range(n_req)]
+
+    def measure(prefix_cache, gap_s=None):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            mode="decoder", max_batch=4, max_new_tokens=T,
+            pad_buckets=(BUCKET,), decode_segment=2, prefill_chunk=CHUNK,
+            prefix_cache=prefix_cache))
+        try:
+            eng.warmup()
+            serve = [eng.generate(prompts[0], SamplingParams(
+                max_new_tokens=T)).result(timeout=600).timing.total_s
+                for _ in range(3)]
+            if gap_s is None:
+                # ~2 arrivals per full service time: requests overlap, so
+                # warm hits join mid-flight the way shared-prompt traffic
+                # actually lands
+                gap_s = float(np.median(serve)) / 2
+            best = None
+            for _ in range(3):               # best-of-3 vs host noise
+                eng.window()                 # counters cover this run only
+                r = run_staggered(eng, prompts, gap_s=gap_s,
+                                  sampling=sampling, keep_results=True)
+                win = eng.window()
+                lanes = win.get("lanes", {})
+                cand = {
+                    "warm_prefill": float(np.mean(
+                        [x.timing.prefill_s for x in r.results[1:]])),
+                    "p95": r.latency_p95_s, "wall": r.wall_s,
+                    "tok_s": r.tokens_per_s,
+                    "compiles": win.get("jit_compiles", -1),
+                    "hits": sum(s.get("prefix_hits", 0)
+                                for s in lanes.values()),
+                    "misses": sum(s.get("prefix_misses", 0)
+                                  for s in lanes.values()),
+                    "tokens": [x.tokens.tolist() for x in r.results]}
+                if (best is None
+                        or cand["warm_prefill"] < best["warm_prefill"]):
+                    best = cand
+        finally:
+            eng.close()
+        return best, gap_s
+
+    off, gap = measure(False)            # the same offered load for both
+    on, _ = measure(True, gap_s=gap)
+    identical = off["tokens"] == on["tokens"]
+    return [("prefix_cache_off", off["wall"] * 1e6,
+             f"warm_prefill_mean={off['warm_prefill'] * 1e3:.2f}ms;"
+             f"p95={off['p95']:.3f}s;tok_s={off['tok_s']:.1f}"),
+            ("prefix_cache_on", on["wall"] * 1e6,
+             f"warm_prefill_mean={on['warm_prefill'] * 1e3:.2f}ms;"
+             f"p95={on['p95']:.3f}s;tok_s={on['tok_s']:.1f};"
+             f"warm_prefill_speedup="
+             f"{off['warm_prefill'] / max(on['warm_prefill'], 1e-9):.2f}x;"
+             f"hits={on['hits']};misses={on['misses']};"
+             f"window_compiles={on['compiles']};"
+             f"tokens_identical={identical}")]
+
+
 def bench_deploy_lab() -> list:
     """Deployment-lab harness: one profile x one ladder scenario through
     ExperimentRunner + drift_report. us_per_call times the whole grid;
@@ -557,6 +650,7 @@ ALL = {
     "continuous_batching": bench_continuous_batching,
     "multi_bucket": bench_multi_bucket,
     "segment_width": bench_segment_width,
+    "prefix_cache": bench_prefix_cache,
     "deploy_lab": bench_deploy_lab,
     "roofline": bench_roofline_summary,
 }

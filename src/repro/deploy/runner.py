@@ -213,7 +213,8 @@ def _engine_summary(engine) -> dict:
             "pad_buckets": list(ec.pad_buckets),
             "continuous": bool(engine.continuous_active),
             "max_new_tokens": ec.max_new_tokens,
-            "segment_width": ec.segment_width}
+            "segment_width": ec.segment_width,
+            "prefix_cache": bool(ec.prefix_cache)}
 
 
 def write_jsonl(records: Iterable[ExperimentRecord], path: str) -> None:

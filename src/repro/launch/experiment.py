@@ -46,6 +46,7 @@ def make_engine_factory(args):
     """
     def factory(scenario: WorkloadScenario):
         decoder = scenario.mode == "decoder"
+        shared = scenario.name.startswith("staggered_shared")
         arch = args.arch if decoder else "gector-base"
         cfg = get_config(arch, smoke=args.smoke)
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -62,8 +63,21 @@ def make_engine_factory(args):
             max_new_tokens=scenario.max_new_tokens,
             max_inflight=args.max_inflight,
             prefill_chunk=max(args.bucket // 4, 8) if decoder else None,
-            segment_width=args.segment_width))
-        if decoder:
+            segment_width=args.segment_width,
+            prefix_cache=scenario.name.endswith("_pc")))
+        if shared:
+            # the prefix-cache A/B cell: every request re-sends the same
+            # long system prompt plus a short unique suffix — the traffic
+            # shape whose prefill cost the prefix store amortizes
+            rng = np.random.default_rng(args.seed)
+            sysprompt = rng.integers(0, cfg.vocab_size,
+                                     (args.bucket * 3 // 4,))
+            sentences = [np.concatenate([
+                sysprompt,
+                rng.integers(0, cfg.vocab_size,
+                             (int(rng.integers(1, args.bucket // 8 + 1)),))])
+                for _ in range(64)]
+        elif decoder:
             sentences = mixed_bucket_prompts(buckets, 64, cfg.vocab_size,
                                              rng_seed=args.seed)
         else:
@@ -73,21 +87,10 @@ def make_engine_factory(args):
                                                         + 8)),))
                          for _ in range(64)]
         # compile every batch and bucket shape here, not inside the first
-        # profile's measured window (the grid's first row would otherwise
-        # carry seconds of compile latency the later rows don't)
+        # profile's measured window — including the first-traffic alloc
+        # warm-in warmup() now fronts (staging pools, prefix stores), so
+        # the staggered rows need no sacrificial traffic before measuring
         eng.warmup()
-        if decoder:
-            # warmup() primes the jit caches but serves no traffic; the
-            # first real requests still pay a residual warm-in the
-            # jit_compiles counter cannot see (lazy staging-pool allocs,
-            # thread pools — measured ~20x on the first staggered row,
-            # pre-existing). Absorb it with one short + one chunk-
-            # prefilled request, then clear the samples they left, as
-            # run_ladder(warmup=True) does for ladder cells.
-            for p in (sentences[0], max(sentences[:4], key=len)):
-                eng.generate(p, SamplingParams(max_new_tokens=2)
-                             ).result(timeout=600)
-            eng.discard_samples()
         sampling = (SamplingParams(max_new_tokens=scenario.max_new_tokens)
                     if scenario.mode == "decoder" else None)
         return eng, sentences, sampling
@@ -104,7 +107,53 @@ def build_scenarios(args) -> list:
             name="staggered", kind=KIND_STAGGERED, mode="decoder",
             n_requests=args.requests, gap_s=args.gap,
             max_new_tokens=args.max_new_tokens))
+    if args.prefix_cache:
+        # A/B pair at equal offered load: same shared-prompt traffic,
+        # prefix cache off vs on — the grid cell that prices what
+        # shared-prefix KV reuse is worth on each machine
+        for name in ("staggered_shared", "staggered_shared_pc"):
+            scenarios.append(WorkloadScenario(
+                name=name, kind=KIND_STAGGERED, mode="decoder",
+                n_requests=args.requests, gap_s=args.gap,
+                max_new_tokens=args.max_new_tokens))
     return scenarios
+
+
+def prefix_cache_cells(records) -> list:
+    """$/1M-requests for the staggered_shared A/B pair, per profile — the
+    deploy-lab cell recording what the prefix cache is worth at equal
+    offered load (same gap, same prompts; only the engine knob differs)."""
+    by_key = {}
+    for rec in records:
+        d = rec.to_dict() if hasattr(rec, "to_dict") else rec
+        name = d["scenario"]["name"]
+        if not name.startswith("staggered_shared"):
+            continue
+        prof = d["profile"]
+        cell = d["cells"][0]
+        usd_hr = prof["hourly_cost_usd"]
+        rps = cell["requests_per_s"]
+        by_key.setdefault(f"{prof['provider']}/{prof['machine']}", {})[
+            "pc" if name.endswith("_pc") else "off"] = {
+                "usd_per_1m_requests": usd_hr / 3600.0 / max(rps, 1e-9)
+                                       * 1e6,
+                "requests_per_s": rps,
+                "prefill_mean_s": cell["prefill_mean_s"]}
+    out = []
+    for key, pair in sorted(by_key.items()):
+        if "off" not in pair or "pc" not in pair:
+            continue
+        off, pc = pair["off"], pair["pc"]
+        out.append({
+            "profile": key,
+            "usd_per_1m_requests_off": off["usd_per_1m_requests"],
+            "usd_per_1m_requests_pc": pc["usd_per_1m_requests"],
+            "usd_drop_pct": 100.0 * (1 - pc["usd_per_1m_requests"]
+                                     / max(off["usd_per_1m_requests"],
+                                           1e-12)),
+            "prefill_mean_off_s": off["prefill_mean_s"],
+            "prefill_mean_pc_s": pc["prefill_mean_s"]})
+    return out
 
 
 def main(argv=None) -> None:
@@ -120,6 +169,10 @@ def main(argv=None) -> None:
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--staggered", action="store_true",
                     help="add the open-loop decoder scenario")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add the shared-prompt staggered A/B pair "
+                         "(prefix_cache off vs on) and report the "
+                         "$/1M-requests drop per profile")
     ap.add_argument("--arch", default="qwen2-0.5b",
                     choices=ARCHS + ["gector-base"],
                     help="decoder arch for --staggered")
@@ -168,10 +221,19 @@ def main(argv=None) -> None:
                               progress=lambda msg: print(f"[run] {msg}",
                                                          flush=True))
     report = drift_report(records, target_ns=args.target_ns)
+    if args.prefix_cache:
+        report["prefix_cache"] = prefix_cache_cells(records)
     write_report(report, drift_path)
     print(f"[out] {grid_path} ({len(records)} records)")
     print(f"[out] {drift_path}")
     print(format_drift(report))
+    for cell in report.get("prefix_cache", []):
+        print(f"prefix-cache {cell['profile']}: "
+              f"${cell['usd_per_1m_requests_off']:.2f} -> "
+              f"${cell['usd_per_1m_requests_pc']:.2f} per 1M requests "
+              f"({cell['usd_drop_pct']:+.1f}% cheaper), prefill mean "
+              f"{cell['prefill_mean_off_s']*1e3:.1f} -> "
+              f"{cell['prefill_mean_pc_s']*1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -215,9 +215,12 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
     the cached prefix + this chunk, then extend the caches at the chunk's
     absolute ``positions`` — recurrent states simply carry across chunks).
     unroll_periods: None = auto (unroll the period stack for single-token
-    decode when ``n_periods`` is small — the scan's per-iteration
-    dynamic-slice machinery costs more than the whole step body at S=1;
-    measured ~2x per decode step on CPU). True/False force it.
+    decode when ``n_periods`` is large — measured on CPU, the scan's
+    per-iteration dynamic-slice of the stacked params is cheap while they
+    fit in cache, but past ~16 periods that slice traffic dominates the
+    S=1 step body: scan 26ms vs unrolled 15ms at 24 periods, 41ms vs 18ms
+    at 32; below the crossover unrolling is 4-16% *slower* than scan).
+    True/False force it.
     Returns (logits_or_hidden, new_caches, aux) where aux = (lb_loss, z_loss).
     """
     # ---- encoder (whisper) ----
@@ -285,8 +288,12 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
             body_fn = jax.checkpoint(body) if remat else body
             xs = (bp, bc) if bc is not None else bp
             from repro.models import runtime_flags
+            # crossover measured at S=1, B=4 on CPU (min-of-5 blocks):
+            # scan wins up to 16 periods (unroll 1.04-1.37x slower), then
+            # the scan's per-iteration param slices stop fitting in cache
+            # and unroll wins >2x (24p: 26ms->15ms; 32p: 41ms->18ms)
             unroll = (unroll_periods if unroll_periods is not None
-                      else mode == "decode" and cfg.n_periods <= 8)
+                      else mode == "decode" and cfg.n_periods > 16)
             if runtime_flags.COST_MODE:   # unrolled so cost_analysis counts
                 cs_list = []              # while-loop bodies only once
                 carry = (x, aux_total)

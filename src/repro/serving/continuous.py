@@ -91,6 +91,7 @@ class _Fill:
     slot: int
     stg: int
     filled: int = 0
+    matched: int = 0       # prompt tokens reused from the prefix store
     temp: float = 0.0
     topk: int = 0
     seed: int = 0
@@ -108,9 +109,9 @@ class _Lane:
     """
 
     def __init__(self, eng, bucket: int):
+        self._eng = eng
         self.bucket = bucket
-        self.pool: CachePool = eng._get_pool(bucket)
-        self.staging: Optional[CachePool] = None   # lazily, on first chunk
+        self.staging: Optional[CachePool] = None   # warmup() or first chunk
         n = eng.ec.max_batch
         self.last_tok = np.zeros(n, np.int32)   # token each row just made
         self.pos = np.zeros(n, np.int32)        # its absolute position
@@ -127,6 +128,15 @@ class _Lane:
     def busy(self) -> bool:
         return bool(self.rows or self.fills)
 
+    @property
+    def pool(self) -> CachePool:
+        """The bucket's slot pool — resolved through the engine's pool
+        cache so pre-creating every lane at scheduler construction (the
+        worker iterates ``lanes.values()``; lazy insertion from client
+        threads raced that) does not eagerly allocate device caches for
+        buckets the workload never touches."""
+        return self._eng._get_pool(self.bucket)
+
     def get_staging(self, eng) -> CachePool:
         if self.staging is None:
             self.staging = CachePool(
@@ -138,15 +148,17 @@ class _Lane:
 class ContinuousScheduler:
     def __init__(self, engine):
         self.eng = engine
-        self.lanes: Dict[int, _Lane] = {}       # bucket -> lane
+        # every lane exists up front (device pools stay lazy — see
+        # _Lane.pool): the worker's idle/busy checks iterate this dict,
+        # and lazily inserting lanes from warmup or client threads raced
+        # that iteration — part of the first-traffic warm-in
+        self.lanes: Dict[int, _Lane] = {
+            b: _Lane(engine, b) for b in engine.ec.pad_buckets}
         self.pending = LaneQueue()              # per-bucket pending queues
         self._rr = 0                            # round-robin cursor
 
     def _lane(self, bucket: int) -> _Lane:
-        lane = self.lanes.get(bucket)
-        if lane is None:
-            lane = self.lanes[bucket] = _Lane(self.eng, bucket)
-        return lane
+        return self.lanes[bucket]
 
     # ------------------------------------------------------------ worker
     def run(self):
@@ -234,14 +246,38 @@ class ContinuousScheduler:
                 eng._lane_stat(bucket)["joins"] += len(claimed)
             any_busy = True
             chunk = eng.ec.prefill_chunk
-            whole = [r for r in claimed
-                     if chunk is None or len(r.tokens) <= chunk]
-            fills = [r for r in claimed
-                     if not (chunk is None or len(r.tokens) <= chunk)]
+            store = eng._prefix_store(bucket)
+            whole, hits, fills, fill_entries = [], [], [], []
+            for r in claimed:
+                entry = store.lookup(r.tokens) if store is not None else None
+                if entry is not None:
+                    stat = eng._lane_stat(bucket)
+                    stat["prefix_hits"] += 1
+                    stat["prefix_hit_tokens"] += entry.n_tokens
+                    if len(r.tokens) - entry.n_tokens <= chunk:
+                        # the unseen suffix fits one chunk: copy the
+                        # stored KV into a lane slot and finish the
+                        # prompt in a single admission-time chunk call
+                        hits.append((r, entry))
+                    else:
+                        # partial match: the fill starts ``matched``
+                        # tokens in instead of at zero
+                        fills.append(r)
+                        fill_entries.append(entry)
+                    continue
+                if store is not None:
+                    eng._lane_stat(bucket)["prefix_misses"] += 1
+                if chunk is None or len(r.tokens) <= chunk:
+                    whole.append(r)
+                else:
+                    fills.append(r)
+                    fill_entries.append(None)
             if whole:
                 self._prefill(whole, lane)
+            if hits:
+                self._prefill_hits(hits, lane)
             if fills:
-                self._begin_fills(fills, lane)
+                self._begin_fills(fills, lane, entries=fill_entries)
 
     # ----------------------------------------------- whole-prompt prefill
     def _prefill(self, claimed, lane: _Lane) -> None:
@@ -288,6 +324,9 @@ class ContinuousScheduler:
         eng._stats["prefill_batches"] += 1
         t1 = time.perf_counter()
         for i, (r, s) in enumerate(zip(claimed, slots)):
+            # whole-prompt joins can still seed the store (a prompt of
+            # exactly one chunk is a storable boundary)
+            self._insert_prefix(lane, r, 0, s)
             r.t_prefill_done = t1
             self._start_row(lane, r, s, int(first[i]), int(lens[i]),
                             budget=int(budget[i]), eos=int(eos[i]),
@@ -314,23 +353,119 @@ class ContinuousScheduler:
         else:
             lane.active[slot] = True
 
+    # ----------------------------------------------- prefix-cache fast path
+    def _prefill_hits(self, claimed, lane: _Lane) -> None:
+        """Admit requests whose prompt matched a stored prefix and whose
+        unseen suffix fits one chunk: copy-on-reference the stored KV into
+        lane slots (one fused gather/scatter) and run a single suffix
+        chunk at the absolute prefix offset — the whole prompt never runs.
+        ``claimed`` is a list of (request, PrefixEntry) pairs; entry refs
+        are released once the copy has been issued. Failure handling
+        mirrors _prefill."""
+        try:
+            self._prefill_hits_inner(claimed, lane)
+        except Exception as e:
+            live = {id(row.req) for row in lane.rows.values()}
+            ids = {id(r) for r, _ in claimed}
+            for slot, rid in enumerate(lane.pool.request_of):
+                if rid in ids and slot not in lane.rows:
+                    lane.pool.release(slot)
+            for r, _ in claimed:
+                if id(r) not in live and not r.future.done():
+                    r.future.set_exception(e)
+
+    def _prefill_hits_inner(self, claimed, lane: _Lane) -> None:
+        eng = self.eng
+        store = eng._prefix_store(lane.bucket)
+        C = eng.ec.prefill_chunk
+        t0 = time.perf_counter()
+        B, pool = len(claimed), lane.pool
+        reqs = [r for r, _ in claimed]
+        # claim without reset: the load overwrites the slots fully
+        slots = pool.claim([id(r) for r in reqs])
+        try:
+            store.load_many([e for _, e in claimed], pool, slots)
+        finally:
+            for _, e in claimed:
+                store.release(e)
+        toks = np.zeros((B, C), np.int32)
+        start = np.zeros(B, np.int32)
+        nvalid = np.zeros(B, np.int32)
+        for i, (r, e) in enumerate(claimed):
+            r.t_start = t0
+            suffix = np.asarray(r.tokens)[e.n_tokens:]
+            toks[i, :len(suffix)] = suffix
+            start[i], nvalid[i] = e.n_tokens, len(suffix)
+        temp, topk, seed, eos, budget, any_sample = \
+            eng._sampling_arrays(reqs)
+        sargs = ((jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(seed))
+                 if any_sample else (None, None, None))
+        first, caches = eng._chunk_fn()(
+            eng.params, jnp.asarray(toks), jnp.asarray(start),
+            jnp.asarray(nvalid), pool.batch_view(slots, gather=True),
+            *sargs)
+        pool.write_back(slots, caches,
+                        lengths=[len(r.tokens) + 1 for r in reqs])
+        first = np.asarray(first)
+        eng._stats["prefill_batches"] += 1
+        t1 = time.perf_counter()
+        for i, ((r, e), s) in enumerate(zip(claimed, slots)):
+            # a prompt extending >= 1 chunk past its matched prefix is a
+            # new, deeper boundary worth storing (conversation growth)
+            self._insert_prefix(lane, r, e.n_tokens, s)
+            r.t_prefill_done = t1
+            self._start_row(lane, r, s, int(first[i]), len(r.tokens),
+                            budget=int(budget[i]), eos=int(eos[i]),
+                            temp=float(temp[i]), topk=int(topk[i]),
+                            seed=int(seed[i]), now=t1)
+
+    def _insert_prefix(self, lane: _Lane, r, matched: int,
+                       slot: int) -> None:
+        """Insert-on-complete: offer the finished prompt's KV (sitting in
+        its lane slot) to the bucket's prefix store. ``matched`` is what
+        this request itself reused — depths at or below it are already
+        stored. No-op when the prefix cache is off for the bucket."""
+        store = self.eng._prefix_store(lane.bucket)
+        if store is None:
+            return
+        ins, evc = store.insert(r.tokens, matched, lane.pool, slot)
+        if ins or evc:
+            stat = self.eng._lane_stat(lane.bucket)
+            stat["prefix_inserts"] += ins
+            stat["prefix_evictions"] += evc
+            stat["prefix_bytes"] = store.bytes_used
+
     # --------------------------------------------------- chunked prefill
-    def _begin_fills(self, claimed, lane: _Lane) -> None:
+    def _begin_fills(self, claimed, lane: _Lane, entries=None) -> None:
         """Reserve a lane slot + a staging slot per long-prompt join; the
         prompt then advances one chunk per scheduler turn in _fill_chunk.
-        Failure handling mirrors _prefill: claimed futures are RUNNING, so
-        fail them here and release both slots."""
+        ``entries[i]`` (when given) is request i's matched ``PrefixEntry``:
+        its stored KV is copied into the staging slot and the fill starts
+        ``matched`` tokens in — a head start on a prompt whose unseen
+        suffix still spans multiple chunks. Entry refs are released here
+        whatever happens. Failure handling mirrors _prefill: claimed
+        futures are RUNNING, so fail them here and release both slots."""
         eng = self.eng
+        store = eng._prefix_store(lane.bucket)
+        if entries is None:
+            entries = [None] * len(claimed)
         try:
             staging = lane.get_staging(eng)
             temp, topk, seed, eos, budget, _ = eng._sampling_arrays(claimed)
             slots = lane.pool.assign_many([id(r) for r in claimed])
             stg = staging.assign_many([id(r) for r in claimed])
+            hit = [(ent, stg[i]) for i, ent in enumerate(entries)
+                   if ent is not None]
+            if hit:
+                store.load_many([ent for ent, _ in hit], staging,
+                                [s for _, s in hit])
             t0 = time.perf_counter()
             for i, r in enumerate(claimed):
                 r.t_start = t0
+                matched = entries[i].n_tokens if entries[i] else 0
                 lane.fills.append(_Fill(
                     req=r, slot=slots[i], stg=stg[i],
+                    filled=matched, matched=matched,
                     temp=float(temp[i]), topk=int(topk[i]),
                     seed=int(seed[i]), eos=int(eos[i]),
                     budget=int(budget[i])))
@@ -347,6 +482,10 @@ class ContinuousScheduler:
             for r in claimed:
                 if not r.future.done():
                     r.future.set_exception(e)
+        finally:
+            for ent in entries:
+                if ent is not None:
+                    store.release(ent)
 
     def _release_fills(self, lane: _Lane, fills) -> None:
         for f in fills:
@@ -403,7 +542,8 @@ class ContinuousScheduler:
         stg_slots = [f.stg for f in fills]
         first, caches = eng._chunk_fn()(
             eng.params, jnp.asarray(toks), jnp.asarray(start),
-            jnp.asarray(nvalid), staging.batch_view(stg_slots), *sargs)
+            jnp.asarray(nvalid), staging.batch_view(stg_slots, gather=True),
+            *sargs)
         staging.write_back(
             stg_slots, caches,
             lengths=[f.filled + int(nvalid[i])
@@ -422,11 +562,12 @@ class ContinuousScheduler:
         # one scatter installs every completed prompt into its lane slot
         lane.pool.write_back(
             [f.slot for _, f in done],
-            staging.batch_view([f.stg for _, f in done]),
+            staging.batch_view([f.stg for _, f in done], gather=True),
             lengths=[f.filled + 1 for _, f in done])
         for i, f in done:
             lane.fills.remove(f)
             staging.release(f.stg)
+            self._insert_prefix(lane, f.req, f.matched, f.slot)
             f.req.t_prefill_done = t1
             self._start_row(lane, f.req, f.slot, int(first[i]), f.filled,
                             budget=f.budget, eos=f.eos, temp=f.temp,

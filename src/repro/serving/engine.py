@@ -92,6 +92,17 @@ class EngineConfig:
     # width 1 instead of max_batch; 'fixed' keeps the full-width segment,
     # the A/B baseline (bench_segment_width). Token-identical either way.
     segment_width: str = "adaptive"
+    # prefix cache: store completed prompts' KV at prefill_chunk-granular
+    # boundaries; a joining request sharing a stored prefix copies it into
+    # its slot (one fused gather/scatter) and prefills only the suffix.
+    # Requires the continuous path + prefill_chunk, and a pure
+    # global-attention pattern (no sliding-window rings / recurrent state
+    # — those cannot be replayed at an absolute offset). Token-identical
+    # to the cold path either way.
+    prefix_cache: bool = False
+    # per-bucket byte budget for stored prefix KV; None sizes the store to
+    # max_batch slots' worth (LRU eviction keeps it under budget)
+    prefix_cache_bytes: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -190,6 +201,24 @@ class ServingEngine:
                         f"slot's {b + engine_cfg.max_new_tokens}; pick a "
                         f"chunk dividing the bucket or raise "
                         f"max_new_tokens")
+        self._prefix_stores = {}          # bucket -> PrefixStore
+        if engine_cfg.prefix_cache:
+            if not self.continuous_active:
+                raise ValueError(
+                    "prefix_cache requires the continuous decoder path "
+                    "(mode='decoder', continuous/use_scan_decode/"
+                    "use_cache_pool all on)")
+            if C is None:
+                raise ValueError(
+                    "prefix_cache requires prefill_chunk: chunk boundaries "
+                    "define the prefix granularity")
+            bad = [k for k in cfg.pattern if k not in ("attn", "attn_global")]
+            if bad or getattr(cfg, "enc_layers", 0):
+                raise ValueError(
+                    f"prefix_cache requires a pure global-attention "
+                    f"pattern: sliding-window rings and recurrent states "
+                    f"cannot be replayed at an absolute KV offset "
+                    f"(pattern={cfg.pattern!r})")
         if self.continuous_active:
             for b in engine_cfg.pad_buckets:
                 self._lane_stat(b)   # fixed key set: metrics() iterates
@@ -354,7 +383,7 @@ class ServingEngine:
                     return
             self._admission.release()
 
-    def warmup(self, batch_sizes=None, *, buckets=None,
+    def warmup(self, batch_sizes=None, *, buckets=None, sampled: bool = False,
                timeout: float = 600) -> None:
         """Compile every batch shape a workload can hit, so jit compiles
         land here instead of inside the first measured request.
@@ -382,11 +411,19 @@ class ServingEngine:
         serves real synthetic batches, which count into the cumulative
         ``metrics()`` — callers measuring afterwards should attribute via
         ``window()``.
+
+        ``sampled=True`` additionally primes the temperature>0 variant of
+        every continuous-path shape (prefill, chunk, segments at every
+        tier) — sampling keys a separate jit specialization (the top-k
+        sort and PRNG enter the graph), so workloads measuring sampled
+        traffic need it to stay compile-clean. Off by default: it roughly
+        doubles warmup compile work and greedy-only callers never hit
+        those variants.
         """
         buckets = tuple(buckets) if buckets else self.ec.pad_buckets
         sizes = sorted(set(batch_sizes or range(1, self.ec.max_batch + 1)))
         if self.continuous_active:
-            self._warmup_continuous(buckets, sizes)
+            self._warmup_continuous(buckets, sizes, sampled=sampled)
             return
         for bucket in buckets:
             tok = np.ones(bucket, np.int32)    # full width -> this bucket
@@ -395,7 +432,7 @@ class ServingEngine:
                     _Request(tok.copy(), Future(), time.perf_counter())
                     for _ in range(b)])
 
-    def _warmup_continuous(self, buckets, sizes) -> None:
+    def _warmup_continuous(self, buckets, sizes, sampled=False) -> None:
         """Prime the continuous scheduler's jitted shapes per bucket:
         prefill-into-slot per join size (gather acquire, as the scheduler
         uses), prefill chunks per fill-batch size, the full-slot decode
@@ -404,7 +441,18 @@ class ServingEngine:
         compact-gather -> tier-width segment -> scatter-back cycle per
         occupancy in ``sizes``, compiling exactly the variants those
         occupancies map to (gather and segment specialize per tier,
-        scatter-back per (tier, occupancy))."""
+        scatter-back per (tier, occupancy)). With the prefix cache on,
+        the store->slot load per hit-batch size and the store's
+        truncating insert copy are primed too (suffix prefill reuses the
+        chunk shapes). ``sampled=True`` repeats prefill/chunk/segments
+        with temperature>0 arrays — the sampling jit variants.
+
+        Beyond compiles, this also fronts the first-traffic allocation
+        work the lazy paths used to pay mid-serve (the ~20x first-request
+        warm-in, invisible to ``jit_compiles``): each bucket's chunked-
+        prefill staging pool and prefix store are created (device
+        allocations) here, and inputs are staged host-side first so the
+        first measured request pays no first-transfer setup either."""
         if (self.latencies or not self._q.empty()
                 or any(l.busy for l in self._scheduler.lanes.values())):
             # the worker would race these direct pool mutations (both
@@ -413,54 +461,94 @@ class ServingEngine:
             raise RuntimeError("warmup() must run before serving traffic")
         n = self.ec.max_batch
         chunk = self.ec.prefill_chunk
+
+        def svariants(b):
+            out = [(None, None, None)]
+            if sampled:
+                out.append((jnp.asarray(np.full(b, 0.5, np.float32)),
+                            jnp.asarray(np.zeros(b, np.int32)),
+                            jnp.asarray(np.zeros(b, np.int32))))
+            return out
+
         for bucket in buckets:
             pool = self._get_pool(bucket)
+            chunked = chunk is not None and bucket > chunk
+            if chunked:
+                # create the fill path's staging pool now — first-traffic
+                # device allocs otherwise land inside the first request
+                lane = self._scheduler.lanes[bucket]
+                jax.block_until_ready(lane.get_staging(self).caches)
+            store = self._prefix_store(bucket)
             for b in sizes:
-                slots, view = pool.acquire(
-                    [f"warm{bucket}.{i}" for i in range(b)], gather=True)
-                toks = jnp.zeros((b, bucket), jnp.int32)
-                lens = jnp.full((b,), min(4, bucket), jnp.int32)
-                tok, caches = self._prefill_fn()(
-                    self.params, toks, lens, view, None, None, None)
-                pool.write_back(slots, caches)
-                jax.block_until_ready(tok)
-                pool.release_many(slots)
-                if chunk is not None and bucket > chunk:
-                    slots = pool.assign_many(
-                        [f"warmc{bucket}.{i}" for i in range(b)])
-                    # the fill path gathers fragmented staging slots via
-                    # _take_slots; batch_view on this fresh pool would
-                    # take the slice path and leave the gather uncompiled
-                    view = _take_slots(pool.caches,
-                                       jnp.asarray(slots, jnp.int32))
-                    ctok, caches = self._chunk_fn()(
-                        self.params, jnp.zeros((b, chunk), jnp.int32),
-                        jnp.zeros((b,), jnp.int32),
-                        jnp.full((b,), chunk, jnp.int32), view,
-                        None, None, None)
+                for sargs in svariants(b):
+                    slots, view = pool.acquire(
+                        [f"warm{bucket}.{i}" for i in range(b)], gather=True)
+                    toks = jnp.asarray(np.zeros((b, bucket), np.int32))
+                    lens = jnp.full((b,), min(4, bucket), jnp.int32)
+                    tok, caches = self._prefill_fn()(
+                        self.params, toks, lens, view, *sargs)
                     pool.write_back(slots, caches)
-                    jax.block_until_ready(ctok)
+                    jax.block_until_ready(tok)
                     pool.release_many(slots)
-            toks, _, _, caches = self._segment_fn()(
-                self.params, jnp.zeros((n, 1), jnp.int32),
-                jnp.zeros((n, 1), jnp.int32), pool.caches,
-                jnp.zeros((n,), bool), jnp.ones((n,), jnp.int32),
-                jnp.full((n,), -1, jnp.int32), None, None, None)
-            pool.caches = caches
-            jax.block_until_ready(toks)
+                    if chunked:
+                        slots = pool.assign_many(
+                            [f"warmc{bucket}.{i}" for i in range(b)])
+                        # the fill path gathers fragmented staging slots via
+                        # _take_slots; batch_view on this fresh pool would
+                        # take the slice path and leave the gather uncompiled
+                        view = _take_slots(pool.caches,
+                                           jnp.asarray(slots, jnp.int32))
+                        ctok, caches = self._chunk_fn()(
+                            self.params,
+                            jnp.asarray(np.zeros((b, chunk), np.int32)),
+                            jnp.zeros((b,), jnp.int32),
+                            jnp.full((b,), chunk, jnp.int32), view,
+                            *sargs)
+                        pool.write_back(slots, caches)
+                        jax.block_until_ready(ctok)
+                        pool.release_many(slots)
+                if store is not None:
+                    # hit path: claimed (unreset) slots + fused store->lane
+                    # copy, per hit-batch size; the suffix chunk call and
+                    # write_back reuse shapes primed above
+                    slots = pool.claim(
+                        [f"warmp{bucket}.{i}" for i in range(b)])
+                    pool.caches = kvcache._load_slots(
+                        pool.caches, store.pool.caches,
+                        jnp.asarray(slots, jnp.int32),
+                        jnp.asarray(np.zeros(b, np.int32)))
+                    jax.block_until_ready(jax.tree.leaves(pool.caches)[0])
+                    pool.release_many(slots)
+            if store is not None:    # insert-on-complete's truncating copy
+                store.pool.caches = kvcache._store_prefix(
+                    store.pool.caches, pool.caches,
+                    jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                    jnp.asarray(chunk, jnp.int32))
+                jax.block_until_ready(
+                    jax.tree.leaves(store.pool.caches)[0])
+            for sargs_n in svariants(n):
+                toks, _, _, caches = self._segment_fn()(
+                    self.params, jnp.zeros((n, 1), jnp.int32),
+                    jnp.zeros((n, 1), jnp.int32), pool.caches,
+                    jnp.zeros((n,), bool), jnp.ones((n,), jnp.int32),
+                    jnp.full((n,), -1, jnp.int32), *sargs_n)
+                pool.caches = caches
+                jax.block_until_ready(toks)
             for occ in sizes:        # compacted segments per width tier
                 width = pick_tier(occ, self._tiers)
                 if width >= n:       # occupancy maps to the full segment
                     continue
-                slots = list(range(occ))
-                _, view = pool.compact_view(slots, width)
-                toks, _, _, seg = self._segment_fn()(
-                    self.params, jnp.zeros((width, 1), jnp.int32),
-                    jnp.zeros((width, 1), jnp.int32), view,
-                    jnp.zeros((width,), bool), jnp.ones((width,), jnp.int32),
-                    jnp.full((width,), -1, jnp.int32), None, None, None)
-                pool.scatter_back(slots, seg)
-                jax.block_until_ready(toks)
+                for sargs_w in svariants(width):
+                    slots = list(range(occ))
+                    _, view = pool.compact_view(slots, width)
+                    toks, _, _, seg = self._segment_fn()(
+                        self.params, jnp.zeros((width, 1), jnp.int32),
+                        jnp.zeros((width, 1), jnp.int32), view,
+                        jnp.zeros((width,), bool),
+                        jnp.ones((width,), jnp.int32),
+                        jnp.full((width,), -1, jnp.int32), *sargs_w)
+                    pool.scatter_back(slots, seg)
+                    jax.block_until_ready(toks)
 
     def discard_samples(self) -> None:
         """Drop the accumulated per-request samples (wall latencies, batch
@@ -654,6 +742,27 @@ class ServingEngine:
             self._pools[bucket] = pool
         return pool
 
+    def _prefix_store(self, bucket: int):
+        """The bucket's prefix store, or None when the prefix cache is off
+        or the bucket cannot hold a full chunk-aligned prefix (a stored
+        prefix is strictly shorter than the prompt, so buckets <= chunk
+        can never match). Store slots share the lane pool's max_len, so
+        loads are shape-identical full-slot copies."""
+        if not self.ec.prefix_cache:
+            return None
+        C = self.ec.prefill_chunk
+        if bucket <= C:
+            return None
+        store = self._prefix_stores.get(bucket)
+        if store is None:
+            store = kvcache.PrefixStore(
+                self.cfg, self.ec.max_batch,
+                bucket + self.ec.max_new_tokens, C,
+                capacity_bytes=self.ec.prefix_cache_bytes,
+                dtype=jnp.float32)
+            self._prefix_stores[bucket] = store
+        return store
+
     def _acquire_caches(self, B: int, bucket: int):
         """Batch-sized decode caches: pooled slots (reset-on-assign, no
         per-batch allocation sweep) or a fresh make_caches tree."""
@@ -801,6 +910,10 @@ class ServingEngine:
             stat = self.lane_stats[bucket] = {
                 "decode_segments": 0, "occupancy_sum": 0, "joins": 0,
                 "prefill_chunks": 0, "compact_segments": 0,
+                "prefix_hits": 0, "prefix_misses": 0,
+                "prefix_hit_tokens": 0, "prefix_inserts": 0,
+                "prefix_evictions": 0,
+                "prefix_bytes": 0,   # gauge (see _LANE_GAUGES), not a counter
                 # segment width -> segments run at it. Every tier is
                 # pre-created (like the outer key set) so the worker only
                 # mutates values — metrics() iterates these dicts from
@@ -822,7 +935,8 @@ class ServingEngine:
         # snapshot: the worker inserts newly built fns concurrently
         pool_fns = (kvcache._reset_slots, kvcache._reset_and_view,
                     kvcache._reset_and_view_run, kvcache._take_slots,
-                    kvcache._write_slots, kvcache._scatter_prefix)
+                    kvcache._write_slots, kvcache._scatter_prefix,
+                    kvcache._load_slots, kvcache._store_prefix)
         for fn in list(self._compiled.values()) + list(pool_fns):
             fns = fn if isinstance(fn, tuple) else (fn,)
             for f in fns:
@@ -831,12 +945,17 @@ class ServingEngine:
                     n += size()
         return n
 
-    @staticmethod
-    def _lane_view(now: dict, prev: Optional[dict] = None) -> dict:
+    # lane stats reported as current values, not window-diffed deltas
+    _LANE_GAUGES = frozenset({"prefix_bytes"})
+
+    @classmethod
+    def _lane_view(cls, now: dict, prev: Optional[dict] = None) -> dict:
         """Lane counter dicts (optionally diffed against a window cursor)
         with the occupancy mean derived per span. Dict-valued counters
         (the segment-width ``tier_hist``) diff per key, dropping keys that
-        did not move — a window's histogram covers only its span."""
+        did not move — a window's histogram covers only its span. Gauges
+        (``prefix_bytes``) pass through undiffed: a window reports the
+        store's current residency, not its movement."""
         out = {}
         for bucket, stat in now.items():
             base = (prev or {}).get(bucket, {})
@@ -846,6 +965,8 @@ class ServingEngine:
                     sub = base.get(k, {})
                     d[k] = {w: c - sub.get(w, 0) for w, c in v.items()
                             if c - sub.get(w, 0)}
+                elif k in cls._LANE_GAUGES:
+                    d[k] = v
                 else:
                     d[k] = v - base.get(k, 0)
             segs = d.get("decode_segments", 0)

@@ -21,6 +21,7 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import make_caches
 
@@ -178,13 +179,19 @@ class CachePool:
         for s in slots:
             self.release(s)
 
-    def batch_view(self, slots: Sequence[int]):
+    def batch_view(self, slots: Sequence[int], *, gather: bool = False):
         """Batch-sized cache pytree for the given slots (slot k of the view
         is pool slot slots[k]). Contiguous slots -> cheap slice; otherwise
-        one fused jitted gather (compiled per slot count, not offsets)."""
+        one fused jitted gather (compiled per slot count, not offsets).
+        ``gather=True`` forces the gather: the eager slice compiles one
+        tiny process-wide program per (offset, width, leaf shape) — fine
+        for one-off views, but on a serving hot path every new slot
+        arrangement pays that compile mid-request (the first-traffic
+        warm-in), while the gather is jit-cached per slot *count* and
+        primed by ``engine.warmup()``."""
         slots = list(slots)
         lo, n = slots[0], len(slots)
-        if slots == list(range(lo, lo + n)):
+        if not gather and slots == list(range(lo, lo + n)):
             return jax.tree.map(
                 lambda x: jax.lax.slice_in_dim(x, lo, lo + n, axis=1),
                 self.caches)
@@ -236,6 +243,291 @@ class CachePool:
             for s, n in zip(slots, lengths):
                 self.lengths[s] = int(n)
 
+    def claim(self, request_ids: Sequence) -> List[int]:
+        """Book slots WITHOUT the device-side reset — for callers that will
+        immediately overwrite the whole slot (the prefix store's
+        copy-on-reference load). Saves the reset scatter that
+        ``assign_many`` pays."""
+        return self._claim(request_ids)
+
     @property
     def free_slots(self) -> int:
         return self.request_of.count(None)
+
+
+# ---------------------------------------------------------- prefix store
+#
+# Shared-prompt KV reuse: prompts are hashed at ``prefill_chunk``-token
+# granularity into a radix trie; a joining request that shares a cached
+# prefix copies the stored KV into its lane slot in one fused
+# gather/scatter (the ``compact_view``/``scatter_back`` idiom) and
+# prefills only the unseen suffix. Entries are refcounted while a load is
+# in flight and evicted LRU-by-bytes against a capacity budget.
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _load_slots(dst, src, dst_idx, src_idx):
+    """Copy slots ``src_idx`` of pool ``src`` into slots ``dst_idx`` of
+    pool ``dst`` — one fused gather+scatter per leaf. The destination is
+    donated so the scatter updates in place; specializes on the slot
+    *count* only (both index vectors are traced)."""
+    return jax.tree.map(
+        lambda d, s: d.at[:, dst_idx].set(jnp.take(s, src_idx, axis=1)),
+        dst, src)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _store_prefix(dst, src, dst_idx, src_idx, n_tokens):
+    """Copy slots ``src_idx`` of ``src`` into ``dst_idx`` of ``dst``,
+    truncating the attention caches to the first ``n_tokens`` positions:
+    ``pos`` entries >= n_tokens become the -1 empty sentinel and ``len``
+    is clamped, so a stored prefix never exposes KV the donor wrote
+    beyond the prefix boundary (whole-prompt ``attn_apply`` stamps valid
+    ``pos`` values on every padded bucket position — harmless in a live
+    slot, where decode overwrites position ``len`` before attending, but
+    garbage if replayed as a prefix). Only sound for pure global-attention
+    cache pytrees ({k, v, pos, len} per block); the engine gates the
+    prefix cache to those configs."""
+    def copy(d, s):
+        out = {}
+        for key in d:
+            taken = jnp.take(s[key], src_idx, axis=1)
+            if key == "pos":
+                taken = jnp.where(taken < n_tokens, taken, -1)
+            elif key == "len":
+                taken = jnp.minimum(taken, n_tokens)
+            out[key] = d[key].at[:, dst_idx].set(taken)
+        return out
+    return {blk: copy(d, src[blk]) for blk, d in dst.items()}
+
+
+class PrefixEntry:
+    """One stored prefix: ``n_tokens`` of KV in slot ``slot`` of the
+    store's pool. ``refs`` guards in-flight loads against eviction;
+    ``tick`` is the LRU stamp."""
+    __slots__ = ("slot", "n_tokens", "nbytes", "refs", "tick", "node")
+
+    def __init__(self, slot, n_tokens, nbytes, node):
+        self.slot = slot
+        self.n_tokens = n_tokens
+        self.nbytes = nbytes
+        self.refs = 0
+        self.tick = 0
+        self.node = node
+
+
+class _TrieNode:
+    __slots__ = ("key", "parent", "children", "entry")
+
+    def __init__(self, key=None, parent=None):
+        self.key = key          # chunk-token bytes (edge label from parent)
+        self.parent = parent
+        self.children = {}      # chunk bytes -> _TrieNode
+        self.entry = None       # PrefixEntry stored at this depth, if any
+
+
+class PrefixTrie:
+    """Host-side bookkeeping for stored prefixes: a radix trie over
+    ``chunk``-token chunks (node depth d = prompt prefix of d*chunk
+    tokens). Pure bookkeeping — device slots live in ``PrefixStore``.
+    Owned by the scheduler worker thread; not thread-safe."""
+
+    def __init__(self, chunk: int, capacity_bytes: int):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if capacity_bytes < 0:
+            raise ValueError(f"capacity_bytes must be >= 0")
+        self.chunk = chunk
+        self.capacity = capacity_bytes
+        self.root = _TrieNode()
+        self.entries: List[PrefixEntry] = []
+        self.bytes = 0
+        self._tick = 0
+
+    def _keys(self, tokens, n_chunks: int):
+        toks = np.asarray(tokens, np.int32)
+        C = self.chunk
+        for i in range(n_chunks):
+            yield toks[i * C:(i + 1) * C].tobytes()
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, tokens) -> Optional[PrefixEntry]:
+        """Deepest stored entry strictly shorter than the prompt (a full
+        match would leave no suffix token to produce the first logits
+        from). Acquires a reference — the caller must ``release`` it once
+        the KV copy has landed."""
+        cap = max(0, (len(tokens) - 1) // self.chunk)
+        node, best = self.root, None
+        for key in self._keys(tokens, cap):
+            node = node.children.get(key)
+            if node is None:
+                break
+            if node.entry is not None:
+                best = node.entry
+        if best is not None:
+            best.refs += 1
+            self._tick += 1
+            best.tick = self._tick
+        return best
+
+    def release(self, entry: PrefixEntry) -> None:
+        if entry.refs <= 0:
+            raise RuntimeError("release() without a matching lookup ref")
+        entry.refs -= 1
+
+    # ------------------------------------------------------------ insert
+    def divergence_chunks(self, tokens) -> int:
+        """Depth (in chunks) of the deepest existing trie node along the
+        prompt's chunk path — where this prompt diverges from everything
+        already stored. An entry inserted here is the longest prefix this
+        prompt shares with any prior one."""
+        n = len(tokens) // self.chunk
+        depth, node = 0, self.root
+        for i, key in enumerate(self._keys(tokens, n)):
+            node = node.children.get(key)
+            if node is None:
+                break
+            depth = i + 1
+        return depth
+
+    def has_entry(self, tokens, n_chunks: int) -> bool:
+        node = self.root
+        for key in self._keys(tokens, n_chunks):
+            node = node.children.get(key)
+            if node is None:
+                return False
+        return node.entry is not None
+
+    def make_room(self, nbytes: int, min_evict: int = 0):
+        """Evict LRU unreferenced entries until ``nbytes`` more fits the
+        budget AND at least ``min_evict`` entries are freed (the store
+        passes 1 when its slot pool is full). Returns the evicted entries
+        (caller releases their device slots), or None — trie unchanged —
+        when the demand cannot be met (all candidates referenced, or
+        nbytes alone exceeds capacity)."""
+        if nbytes > self.capacity:
+            return None
+        victims, freed = [], 0
+        cands = sorted((e for e in self.entries if e.refs == 0),
+                       key=lambda e: e.tick)
+        i = 0
+        while (self.bytes - freed + nbytes > self.capacity
+               or len(victims) < min_evict):
+            if i >= len(cands):
+                return None
+            victims.append(cands[i])
+            freed += cands[i].nbytes
+            i += 1
+        for e in victims:
+            self._remove(e)
+        return victims
+
+    def attach(self, tokens, n_chunks: int, nbytes: int,
+               slot: int) -> PrefixEntry:
+        """Create the entry for the first ``n_chunks`` chunks of
+        ``tokens`` (path nodes are created as needed). The caller has
+        already made room and copied the KV into ``slot``."""
+        node = self.root
+        for key in self._keys(tokens, n_chunks):
+            child = node.children.get(key)
+            if child is None:
+                child = node.children[key] = _TrieNode(key, node)
+            node = child
+        if node.entry is not None:
+            raise RuntimeError(f"entry already stored at depth {n_chunks}")
+        entry = PrefixEntry(slot, n_chunks * self.chunk, nbytes, node)
+        node.entry = entry
+        self.entries.append(entry)
+        self.bytes += nbytes
+        self._tick += 1
+        entry.tick = self._tick
+        return entry
+
+    def _remove(self, entry: PrefixEntry) -> None:
+        node = entry.node
+        node.entry = None
+        self.entries.remove(entry)
+        self.bytes -= entry.nbytes
+        # prune now-empty path nodes so stale chunks don't count as
+        # divergence points for future inserts
+        while (node is not self.root and node.entry is None
+               and not node.children):
+            parent = node.parent
+            del parent.children[node.key]
+            node = parent
+
+
+class PrefixStore:
+    """Device half of the prefix cache for one pad bucket: a ``CachePool``
+    holding stored prefixes plus the trie that indexes them. Slots have
+    the same ``max_len`` as the lane pool so loads are shape-identical
+    full-slot copies. Owned by the scheduler worker thread."""
+
+    def __init__(self, cfg, n_slots: int, max_len: int, chunk: int, *,
+                 capacity_bytes: Optional[int] = None, dtype=jnp.bfloat16):
+        self.pool = CachePool(cfg, n_slots, max_len, dtype=dtype)
+        self.entry_bytes = int(sum(x.nbytes
+                                   for x in jax.tree.leaves(self.pool._template)))
+        if capacity_bytes is None:
+            capacity_bytes = n_slots * self.entry_bytes
+        self.trie = PrefixTrie(chunk, capacity_bytes)
+        self.chunk = chunk
+
+    @property
+    def bytes_used(self) -> int:
+        return self.trie.bytes
+
+    def lookup(self, tokens) -> Optional[PrefixEntry]:
+        return self.trie.lookup(tokens)
+
+    def release(self, entry: PrefixEntry) -> None:
+        self.trie.release(entry)
+
+    def load_many(self, entries: Sequence[PrefixEntry], dst_pool: CachePool,
+                  dst_slots: Sequence[int]) -> None:
+        """Copy-on-reference: one fused gather/scatter moving every
+        entry's stored KV into its destination slot. Destination slots
+        must be claimed but need no reset — the copy overwrites them
+        fully (store slots carry the truncated-pos template semantics
+        already)."""
+        dst_pool.caches = _load_slots(
+            dst_pool.caches, self.pool.caches,
+            jnp.asarray(list(dst_slots), jnp.int32),
+            jnp.asarray([e.slot for e in entries], jnp.int32))
+
+    def insert(self, tokens, matched_tokens: int, src_pool: CachePool,
+               src_slot: int):
+        """Insert-on-complete. Two candidate depths per finished prompt:
+        the divergence depth (the longest prefix shared with anything
+        already in the trie — what the NEXT similar prompt will actually
+        hit) and the full depth ``len(tokens)//chunk``. Each is stored
+        only if strictly deeper than ``matched_tokens`` (what this
+        request itself reused — re-storing that would duplicate an
+        existing entry) and not already present. Returns
+        (inserted, evicted) counts."""
+        inserted = evicted = 0
+        full = len(tokens) // self.chunk
+        div = min(self.trie.divergence_chunks(tokens), full)
+        depths = []
+        for d in (div, full):
+            if (d * self.chunk > matched_tokens and d not in depths
+                    and not self.trie.has_entry(tokens, d)):
+                depths.append(d)
+        for d in depths:
+            victims = self.trie.make_room(
+                self.entry_bytes,
+                min_evict=0 if self.pool.free_slots else 1)
+            if victims is None:
+                break                      # budget full of referenced entries
+            for e in victims:
+                self.pool.release(e.slot)
+            evicted += len(victims)
+            slot = self.pool.claim([("prefix", d)])[0]
+            self.pool.caches = _store_prefix(
+                self.pool.caches, src_pool.caches,
+                jnp.asarray([slot], jnp.int32),
+                jnp.asarray([src_slot], jnp.int32),
+                jnp.asarray(d * self.chunk, jnp.int32))
+            self.pool.lengths[slot] = d * self.chunk
+            self.trie.attach(tokens, d, self.entry_bytes, slot)
+            inserted += 1
+        return inserted, evicted

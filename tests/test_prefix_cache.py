@@ -1,0 +1,277 @@
+"""Prefix cache: shared-prompt KV reuse with copy-on-reference slots.
+
+Trie properties (hypothesis): the byte budget is never exceeded, a
+referenced entry is never evicted, lookup returns the deepest stored
+prefix strictly shorter than the prompt (partial matches fall back to the
+shallower entry). Engine acceptance: warm hits produce token-identical
+output to a cold engine under greedy AND sampled decode, the measured
+window stays compile-clean with the cache on, hit/miss/insert/evict
+counters surface per lane, a tiny byte budget forces evictions without
+breaking correctness, cancel mid-suffix-prefill leaks no slot or
+reference, and unsupported configs are rejected at engine init."""
+import random
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.kvcache import PrefixTrie
+
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+RNG = np.random.RandomState(31)
+
+
+def _engine(**kw):
+    base = dict(mode="decoder", max_batch=4, max_new_tokens=6,
+                pad_buckets=(32,), decode_segment=2, prefill_chunk=8,
+                prefix_cache=True)
+    base.update(kw)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base))
+
+
+def _prompt(n):
+    return RNG.randint(0, CFG.vocab_size, (n,))
+
+
+# ------------------------------------------------------------ trie properties
+CHUNK = 4
+ENTRY_BYTES = 100
+
+
+def _toks(rng, n_chunks, fam):
+    """A prompt of n_chunks full chunks drawn from family ``fam`` — prompts
+    in one family share every chunk prefix, across families they share
+    none (chunk 0 already differs)."""
+    return [fam * 1000 + i for i in range(n_chunks * CHUNK)]
+
+
+def _simulate(seed, capacity_entries):
+    """Random insert/lookup/release traffic against one trie, enforcing
+    the store's discipline (make_room before every attach), checking the
+    invariants after every op. Returns the trie for final checks."""
+    rng = random.Random(seed)
+    trie = PrefixTrie(CHUNK, capacity_entries * ENTRY_BYTES)
+    held = []                                   # (entry, tokens) refs we hold
+    for _ in range(40):
+        op = rng.random()
+        fam = rng.randint(0, 2)
+        n = rng.randint(1, 5)
+        toks = _toks(rng, n, fam)
+        if op < 0.5:                            # insert at depth n
+            if not trie.has_entry(toks, n):
+                victims = trie.make_room(ENTRY_BYTES)
+                if victims is not None:
+                    trie.attach(toks, n, ENTRY_BYTES, slot=len(trie.entries))
+        elif op < 0.8:                          # lookup (acquires a ref)
+            e = trie.lookup(toks + [7])         # +1 token past the chunks
+            if e is not None:
+                assert e.n_tokens <= len(toks)  # never the full prompt
+                held.append(e)
+        elif held:                              # release a held ref
+            trie.release(held.pop(rng.randrange(len(held))))
+        # invariants
+        assert trie.bytes <= trie.capacity
+        assert trie.bytes == len(trie.entries) * ENTRY_BYTES
+        for e in held:
+            assert e in trie.entries            # referenced -> never evicted
+    return trie, held
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**9), cap=st.integers(1, 4))
+def test_trie_budget_and_refs_hold_under_random_traffic(seed, cap):
+    trie, held = _simulate(seed, cap)
+    for e in held:                              # cleanup path stays sound
+        trie.release(e)
+        assert e.refs >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**9), deep=st.integers(2, 6))
+def test_trie_lookup_returns_deepest_strictly_shorter(seed, deep):
+    rng = random.Random(seed)
+    trie = PrefixTrie(CHUNK, 100 * ENTRY_BYTES)
+    toks = _toks(rng, deep, fam=0)
+    depths = sorted(rng.sample(range(1, deep + 1), rng.randint(1, deep)))
+    for d in depths:
+        trie.attach(toks, d, ENTRY_BYTES, slot=d)
+    # probe at every prompt length: the match is the deepest stored depth
+    # whose prefix is strictly shorter than the prompt
+    for probe_len in range(1, deep * CHUNK + 2):
+        want = max((d for d in depths if d * CHUNK < probe_len), default=None)
+        e = trie.lookup(toks[:probe_len] + ([] if probe_len <= deep * CHUNK
+                                            else [9]))
+        if want is None:
+            assert e is None
+        else:
+            assert e is not None and e.n_tokens == want * CHUNK
+            trie.release(e)
+
+
+def test_trie_partial_prefix_falls_back_to_shallower_entry():
+    trie = PrefixTrie(CHUNK, 100 * ENTRY_BYTES)
+    toks = _toks(random.Random(0), 3, fam=0)
+    trie.attach(toks, 1, ENTRY_BYTES, slot=0)
+    trie.attach(toks, 3, ENTRY_BYTES, slot=1)
+    # diverges inside chunk 1: only the depth-1 entry matches
+    probe = toks[:CHUNK] + [999] * (2 * CHUNK)
+    e = trie.lookup(probe)
+    assert e is not None and e.n_tokens == CHUNK
+    trie.release(e)
+    # diverges inside chunk 0: nothing matches
+    assert trie.lookup([888] * (3 * CHUNK)) is None
+
+
+def test_trie_make_room_refuses_when_all_referenced():
+    trie = PrefixTrie(CHUNK, 2 * ENTRY_BYTES)
+    a = _toks(random.Random(0), 2, fam=0)
+    b = _toks(random.Random(0), 2, fam=1)
+    trie.attach(a, 2, ENTRY_BYTES, slot=0)
+    trie.attach(b, 2, ENTRY_BYTES, slot=1)
+    ea = trie.lookup(a + [7])
+    eb = trie.lookup(b + [7])
+    assert trie.make_room(ENTRY_BYTES) is None   # both held: no victim
+    assert trie.bytes == 2 * ENTRY_BYTES         # trie unchanged
+    trie.release(ea)
+    victims = trie.make_room(ENTRY_BYTES)        # LRU: a released first but
+    assert victims is not None                   # b still referenced -> a
+    assert victims[0] is ea and eb in trie.entries
+    trie.release(eb)
+
+
+# ------------------------------------------------------- engine: token identity
+def _shared_prompts(n, sys_tokens=20, lo=2, hi=10):
+    """Prompts sharing one system prompt + short unique suffixes."""
+    rng = np.random.default_rng(17)
+    sysp = rng.integers(0, CFG.vocab_size, (sys_tokens,))
+    return [np.concatenate([sysp, rng.integers(
+        0, CFG.vocab_size, (int(rng.integers(lo, hi + 1)),))])
+        for _ in range(n)]
+
+
+@pytest.mark.parametrize("sampling", [
+    None,                                                    # greedy
+    SamplingParams(max_new_tokens=6, temperature=0.8, top_k=20, seed=11),
+])
+def test_warm_hit_token_identical_to_cold(sampling):
+    """The same prompt decoded via a warm prefix hit must produce the
+    exact tokens a cold engine produces — greedy and sampled (the
+    counter-based PRNG keys on absolute position, not prefill shape)."""
+    prompts = _shared_prompts(5)
+    outs = {}
+    for on in (False, True):
+        eng = _engine(prefix_cache=on)
+        try:
+            if on:   # populate the store, then re-serve the same prompts
+                eng.generate(prompts[0], sampling).result(timeout=300)
+            hs = [eng.generate(p, sampling) for p in prompts]
+            outs[on] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for cold, warm in zip(outs[False], outs[True]):
+        assert (cold == warm).all()
+
+
+def test_hits_counted_and_window_compile_clean():
+    # sysprompt = exactly 3 chunks; every suffix keeps the prompt long
+    # enough that lookup's (len-1)//chunk cap reaches the depth-3 entry
+    prompts = _shared_prompts(6, sys_tokens=24, lo=2, hi=6)
+    eng = _engine()
+    try:
+        eng.warmup()
+        eng.generate(prompts[0]).result(timeout=300)  # cold miss + insert
+        eng.window()                                  # measured span starts
+        for h in [eng.generate(p) for p in prompts]:
+            h.result(timeout=300)
+        w = eng.window()
+        lane = w["lanes"][32]
+        assert lane["prefix_hits"] == 6               # every one a warm hit
+        assert lane["prefix_misses"] == 0
+        assert lane["prefix_hit_tokens"] == 6 * 24    # full sysprompt each
+        assert lane["prefix_bytes"] > 0               # gauge, not diffed
+        assert w["jit_compiles"] == 0                 # acceptance: clean span
+        m = eng.metrics()["lanes"][32]
+        assert m["prefix_misses"] == 1 and m["prefix_inserts"] >= 1
+    finally:
+        eng.close()
+
+
+def test_tiny_budget_evicts_and_stays_correct():
+    """A byte budget of exactly one entry forces LRU eviction on every new
+    prefix family; counters move and outputs stay identical to cold."""
+    probe = _engine()
+    try:
+        entry_bytes = probe._prefix_store(32).entry_bytes
+    finally:
+        probe.close()
+    rng = np.random.default_rng(5)
+    fams = [rng.integers(0, CFG.vocab_size, (20,)) for _ in range(3)]
+    prompts = [np.concatenate([f, rng.integers(0, CFG.vocab_size, (4,))])
+               for f in fams for _ in range(2)]
+    cold = _engine(prefix_cache=False)
+    try:
+        want = [cold.generate(p).result(timeout=300).tokens
+                for p in prompts]
+    finally:
+        cold.close()
+    eng = _engine(prefix_cache_bytes=entry_bytes)
+    try:
+        got = [eng.generate(p).result(timeout=300).tokens for p in prompts]
+        m = eng.metrics()["lanes"][32]
+        assert m["prefix_evictions"] >= 2             # families rotate out
+        assert m["prefix_bytes"] <= entry_bytes       # budget respected
+        assert m["prefix_inserts"] >= 3
+    finally:
+        eng.close()
+    for a, b in zip(want, got):
+        assert (a == b).all()
+
+
+# ------------------------------------------------------------- cancel safety
+def test_cancel_mid_suffix_prefill_leaks_no_slot_or_ref():
+    """Cancel a request while its post-hit suffix chunks are still
+    filling: the lane slot, staging slot and store reference must all be
+    released, and the store must keep serving hits afterwards."""
+    prompts = _shared_prompts(3, sys_tokens=16, lo=12, hi=14)  # suffix > C
+    eng = _engine(max_new_tokens=24, prefill_chunk=4)
+    try:
+        eng.generate(prompts[0]).result(timeout=300)  # insert the prefix
+        blocker = eng.generate(_prompt(30))           # keeps the lane busy
+        h = eng.generate(prompts[1])                  # hit + chunked suffix
+        deadline = time.time() + 60
+        base = eng.metrics()["prefill_chunks"]
+        while eng.metrics()["prefill_chunks"] <= base:
+            assert time.time() < deadline
+            time.sleep(0.001)
+        assert h.cancel()
+        assert h.result(timeout=300).finish_reason == "cancelled"
+        blocker.result(timeout=300)
+        ok = eng.generate(prompts[2]).result(timeout=300)
+        assert len(ok.tokens) == 24                   # slots not leaked
+        store = eng._prefix_store(32)
+        assert all(e.refs == 0 for e in store.trie.entries)
+        pool = eng._get_pool(32)
+        assert all(r is None for r in pool.request_of)
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------- config gate
+def test_unsupported_configs_rejected_at_init():
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(continuous=False)                     # needs the scheduler
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(prefill_chunk=None)                   # needs chunk hashing
+    g2 = get_config("gemma2-27b", smoke=True)         # windowed attention:
+    with pytest.raises(ValueError, match="prefix_cache"):   # unsupported
+        ServingEngine(g2, init_params(g2, jax.random.PRNGKey(0)),
+                      EngineConfig(mode="decoder", max_batch=2,
+                                   max_new_tokens=4, pad_buckets=(32,),
+                                   prefill_chunk=8, prefix_cache=True))
