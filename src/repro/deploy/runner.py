@@ -32,7 +32,9 @@ from repro.core.loadtest import run_ladder, run_staggered
 from repro.deploy.profiles import EnvironmentProfile
 from repro.deploy.telemetry import HardwareSampler
 
-SCHEMA_VERSION = 1
+# v2: engine sub-dict gained weight_quant / kv_quant / weight_bytes (the
+# quantized-serving A/B cells are self-describing)
+SCHEMA_VERSION = 2
 
 # every JSONL row carries exactly these top-level fields (tested)
 RECORD_FIELDS = ("schema_version", "profile", "scenario", "engine",
@@ -214,7 +216,12 @@ def _engine_summary(engine) -> dict:
             "continuous": bool(engine.continuous_active),
             "max_new_tokens": ec.max_new_tokens,
             "segment_width": ec.segment_width,
-            "prefix_cache": bool(ec.prefix_cache)}
+            "prefix_cache": bool(ec.prefix_cache),
+            # weight/KV dtypes (None = bf16/f32 default path) + resident
+            # weight bytes, so quant A/B grid cells are self-describing
+            "weight_quant": ec.weight_quant,
+            "kv_quant": ec.kv_quant,
+            "weight_bytes": int(getattr(engine, "_weight_bytes", 0))}
 
 
 def write_jsonl(records: Iterable[ExperimentRecord], path: str) -> None:

@@ -10,10 +10,30 @@ import jax.numpy as jnp
 from repro.kernels.cache_matmul import cache_matmul, vmem_bytes  # noqa: F401
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ------------------------------------------------------ quantized matmul
+# Which backend ``matmul_q8`` dispatches to. "pallas" runs the dequant-fused
+# VMEM-tiled kernel (interpreted off-TPU — parity tests only on CPU);
+# "xla" fuses the same late-scale contraction through XLA, which is the
+# fast path on CPU hosts (the paper's serving target). Both keep the int8
+# weights as the stored operand — neither materializes a float weight copy.
+QUANT_MATMUL_IMPL = "xla"
+
+
+def set_quant_matmul_impl(impl: str) -> str:
+    """Switch the quantized-matmul backend; returns the previous value."""
+    global QUANT_MATMUL_IMPL
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"impl must be 'xla' or 'pallas', got {impl!r}")
+    prev = QUANT_MATMUL_IMPL
+    QUANT_MATMUL_IMPL = impl
+    return prev
 
 
 # ------------------------------------------------------ attn block sizing
@@ -77,6 +97,25 @@ def matmul(x, w, *, bm=128, bn=128, bk=128):
     return out[:M, : w.shape[1]].reshape(*lead, w.shape[1])
 
 
+def matmul_q8(x, qw, scale, *, bm=128, bn=128, bk=128):
+    """Dequant-fused matmul: x (M, K) float @ qw (K, N) int8 with (N,)
+    per-output-channel scales applied at the fp32 accumulator. int8
+    magnitudes (<= 127) are exact in bf16, and per-column scales commute
+    with the contraction, so both backends equal dequantize-then-matmul
+    without ever storing the dequantized weights. Returns (M, N) fp32."""
+    if QUANT_MATMUL_IMPL == "xla":
+        return jnp.dot(x, qw.astype(x.dtype),
+                       preferred_element_type=jnp.float32) * scale
+    M, K = x.shape
+    N = qw.shape[1]
+    x2 = _pad_axis(_pad_axis(x, 0, bm), 1, bk)
+    qw2 = _pad_axis(_pad_axis(qw, 0, bk), 1, bn)
+    s2 = _pad_axis(scale.astype(jnp.float32), 0, bn)
+    out = int8_matmul(x2, qw2, s2, bm=bm, bn=bn, bk=bk,
+                      interpret=not _on_tpu())
+    return out[:M, :N].astype(jnp.float32)
+
+
 def mha_prefill(q, k, v, *, causal=True, window=None, softcap=None,
                 bq=None, bk=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
@@ -130,3 +169,14 @@ def lru_scan(a, b, *, bs=256):
     bp = _pad_axis(b.astype(jnp.float32), 1, bs, value=0.0)  # b=0: carry
     out = rglru_scan(ap, bp, bs=bs, interpret=not _on_tpu())
     return out[:, :S]
+
+
+# Measured attention block sizes from tools/autotune_blocks.py, if the
+# sweep has been run; they replace the heuristic entries for their shape
+# buckets. Absent file -> heuristics only.
+try:
+    from repro.kernels.autotuned import MEASURED_ATTN_BLOCKS
+except ImportError:  # pragma: no cover - depends on generated file
+    MEASURED_ATTN_BLOCKS = {}
+for _key, _blocks in MEASURED_ATTN_BLOCKS.items():
+    register_attn_block_sizes(*_key, *_blocks)

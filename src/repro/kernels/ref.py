@@ -12,6 +12,13 @@ def matmul_ref(x, w):
     return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
 
 
+def int8_matmul_ref(x, qw, scale):
+    """Dequantize-then-matmul oracle for the fused kernel: x (M, K) float,
+    qw (K, N) int8, scale (N,) f32 -> (M, N) f32."""
+    w = qw.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
     """q: (BH, Sq, D); k/v: (BHkv, Skv, D) with BH = BHkv * G (grouped).
     Returns (BH, Sq, D) float32."""

@@ -57,6 +57,7 @@ def make_engine_factory(args):
         # fixed keeps the full-width A/B baseline)
         buckets = ((args.bucket // 2, args.bucket) if decoder
                    else (args.bucket,))
+        quant = "int8" if scenario.name.endswith("_q8") else None
         eng = ServingEngine(cfg, params, EngineConfig(
             mode=scenario.mode, max_batch=args.max_batch,
             pad_buckets=buckets,
@@ -64,7 +65,8 @@ def make_engine_factory(args):
             max_inflight=args.max_inflight,
             prefill_chunk=max(args.bucket // 4, 8) if decoder else None,
             segment_width=args.segment_width,
-            prefix_cache=scenario.name.endswith("_pc")))
+            prefix_cache=scenario.name.endswith("_pc"),
+            weight_quant=quant, kv_quant=quant))
         if shared:
             # the prefix-cache A/B cell: every request re-sends the same
             # long system prompt plus a short unique suffix — the traffic
@@ -116,6 +118,16 @@ def build_scenarios(args) -> list:
                 name=name, kind=KIND_STAGGERED, mode="decoder",
                 n_requests=args.requests, gap_s=args.gap,
                 max_new_tokens=args.max_new_tokens))
+    if args.quant:
+        # quantized-serving A/B pair at equal offered load: same
+        # mixed-bucket traffic, int8 weights + int8 KV vs the bf16/f32
+        # default — the grid cell pricing the paper's cache-dominance
+        # finding (footprint, not FLOPs, decides the cheapest profile)
+        for name in ("staggered_quant", "staggered_quant_q8"):
+            scenarios.append(WorkloadScenario(
+                name=name, kind=KIND_STAGGERED, mode="decoder",
+                n_requests=args.requests, gap_s=args.gap,
+                max_new_tokens=args.max_new_tokens))
     return scenarios
 
 
@@ -156,6 +168,54 @@ def prefix_cache_cells(records) -> list:
     return out
 
 
+def quant_cells(records) -> list:
+    """$/1M-requests and resident-memory footprint for the staggered_quant
+    A/B pair, per profile — the deploy-lab cell pricing the memory-
+    footprint reduction (weights + lane KV) quantization buys at equal
+    offered load. Footprint comes from the record's self-describing
+    ``engine`` dict (weight_bytes) plus the lane kv_bytes gauges in its
+    engine window."""
+    by_key = {}
+    for rec in records:
+        d = rec.to_dict() if hasattr(rec, "to_dict") else rec
+        name = d["scenario"]["name"]
+        if not name.startswith("staggered_quant"):
+            continue
+        prof = d["profile"]
+        cell = d["cells"][0]
+        usd_hr = prof["hourly_cost_usd"]
+        rps = cell["requests_per_s"]
+        lanes = d["engine_window"].get("lanes", {})
+        footprint = (d["engine"]["weight_bytes"]
+                     + sum(s.get("kv_bytes", 0) for s in lanes.values()))
+        by_key.setdefault(f"{prof['provider']}/{prof['machine']}", {})[
+            "q8" if name.endswith("_q8") else "off"] = {
+                "usd_per_1m_requests": usd_hr / 3600.0 / max(rps, 1e-9)
+                                       * 1e6,
+                "requests_per_s": rps,
+                "footprint_bytes": footprint,
+                "tokens_per_s": cell["tokens_per_s"]}
+    out = []
+    for key, pair in sorted(by_key.items()):
+        if "off" not in pair or "q8" not in pair:
+            continue
+        off, q8 = pair["off"], pair["q8"]
+        out.append({
+            "profile": key,
+            "usd_per_1m_requests_off": off["usd_per_1m_requests"],
+            "usd_per_1m_requests_q8": q8["usd_per_1m_requests"],
+            "usd_drop_pct": 100.0 * (1 - q8["usd_per_1m_requests"]
+                                     / max(off["usd_per_1m_requests"],
+                                           1e-12)),
+            "footprint_bytes_off": off["footprint_bytes"],
+            "footprint_bytes_q8": q8["footprint_bytes"],
+            "footprint_ratio": off["footprint_bytes"]
+                               / max(q8["footprint_bytes"], 1),
+            "tokens_per_s_off": off["tokens_per_s"],
+            "tokens_per_s_q8": q8["tokens_per_s"]})
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -173,6 +233,10 @@ def main(argv=None) -> None:
                     help="add the shared-prompt staggered A/B pair "
                          "(prefix_cache off vs on) and report the "
                          "$/1M-requests drop per profile")
+    ap.add_argument("--quant", action="store_true",
+                    help="add the quantized-serving staggered A/B pair "
+                         "(int8 weights + int8 KV vs bf16/f32) and report "
+                         "the per-profile footprint + $/1M-requests delta")
     ap.add_argument("--arch", default="qwen2-0.5b",
                     choices=ARCHS + ["gector-base"],
                     help="decoder arch for --staggered")
@@ -223,6 +287,8 @@ def main(argv=None) -> None:
     report = drift_report(records, target_ns=args.target_ns)
     if args.prefix_cache:
         report["prefix_cache"] = prefix_cache_cells(records)
+    if args.quant:
+        report["quant"] = quant_cells(records)
     write_report(report, drift_path)
     print(f"[out] {grid_path} ({len(records)} records)")
     print(f"[out] {drift_path}")
@@ -234,6 +300,14 @@ def main(argv=None) -> None:
               f"({cell['usd_drop_pct']:+.1f}% cheaper), prefill mean "
               f"{cell['prefill_mean_off_s']*1e3:.1f} -> "
               f"{cell['prefill_mean_pc_s']*1e3:.1f} ms")
+    for cell in report.get("quant", []):
+        print(f"quant {cell['profile']}: "
+              f"${cell['usd_per_1m_requests_off']:.2f} -> "
+              f"${cell['usd_per_1m_requests_q8']:.2f} per 1M requests "
+              f"({cell['usd_drop_pct']:+.1f}%), footprint "
+              f"{cell['footprint_bytes_off']} -> "
+              f"{cell['footprint_bytes_q8']} bytes "
+              f"({cell['footprint_ratio']:.2f}x smaller)")
 
 
 if __name__ == "__main__":

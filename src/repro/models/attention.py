@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.models.layers import apply_rope, dense_init, split_keys
 from repro.parallel.sharding import shard_activation
+from repro.quant.kv import dequantize_kv, quantize_kv
+from repro.quant.weights import qeinsum
 
 NEG_INF = -1e30
 
@@ -60,7 +62,7 @@ def _project_qkv(cfg, p, x, positions):
         B, S = x.shape[:2]
         hkv = cfg.n_kv_heads
         gq = cfg.n_heads // hkv
-        qkv = jnp.einsum("bsd,dgch->bsgch", x, p["wqkv"])
+        qkv = qeinsum("bsd,dgch->bsgch", x, p["wqkv"])
         if cfg.attn.qkv_bias:
             qkv = qkv + p["bqkv"]
         qkv = shard_activation(qkv, "batch", None, "model", None, None)
@@ -68,9 +70,9 @@ def _project_qkv(cfg, p, x, positions):
         k = qkv[:, :, :, gq]
         v = qkv[:, :, :, gq + 1]
     else:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = qeinsum("bsd,dhk->bshk", x, p["wq"])
+        k = qeinsum("bsd,dhk->bshk", x, p["wk"])
+        v = qeinsum("bsd,dhk->bshk", x, p["wv"])
         if cfg.attn.qkv_bias:
             q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     if cfg.attn.rope_base is not None and positions is not None:
@@ -205,6 +207,29 @@ def naive_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
     return out.reshape(B, Sq, Hq, D)
 
 
+# ----------------------------------------------------- cache quantization
+def _cache_read_kv(cache, dtype):
+    """Cache K/V as float ``dtype``, dequantizing int8 entries through
+    their per-(position, head) scale planes. Empty slots (pos = -1) hold
+    zero payload/scale and are masked by attention either way."""
+    if "k_scale" in cache:
+        return (dequantize_kv(cache["k"], cache["k_scale"], dtype),
+                dequantize_kv(cache["v"], cache["v_scale"], dtype))
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+def _kv_payload(cache, k, v):
+    """Arrays to store for a K/V cache write, matching the cache layout:
+    float caches get dtype-cast payloads; int8 caches get payloads
+    quantized at scatter plus the scale planes for the written span."""
+    if "k_scale" in cache:
+        qk, sk = quantize_kv(k)
+        qv, sv = quantize_kv(v)
+        return {"k": qk, "k_scale": sk, "v": qv, "v_scale": sv}
+    return {"k": k.astype(cache["k"].dtype),
+            "v": v.astype(cache["v"].dtype)}
+
+
 # ------------------------------------------------------------------- blocks
 def attn_apply(cfg, p, x, positions, *, window=None, cache=None,
                use_chunked=None):
@@ -235,16 +260,17 @@ def attn_apply(cfg, p, x, positions, *, window=None, cache=None,
     if cache is not None:
         L = cache["k"].shape[1]
         if S >= L:  # keep the last L positions (ring semantics)
-            cache = {"k": k[:, S - L:].astype(cache["k"].dtype),
-                     "v": v[:, S - L:].astype(cache["v"].dtype),
-                     "pos": positions[:, S - L:],
-                     "len": jnp.full((B,), S, jnp.int32)}
+            pay = _kv_payload(cache, k[:, S - L:], v[:, S - L:])
+            cache = dict(pay, pos=positions[:, S - L:],
+                         len=jnp.full((B,), S, jnp.int32))
         else:
-            cache = {"k": cache["k"].at[:, :S].set(k.astype(cache["k"].dtype)),
-                     "v": cache["v"].at[:, :S].set(v.astype(cache["v"].dtype)),
-                     "pos": cache["pos"].at[:, :S].set(positions),
-                     "len": jnp.full((B,), S, jnp.int32)}
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            pay = _kv_payload(cache, k, v)
+            cache = dict(
+                {key: cache[key].at[:, :S].set(val)
+                 for key, val in pay.items()},
+                pos=cache["pos"].at[:, :S].set(positions),
+                len=jnp.full((B,), S, jnp.int32))
+    o = qeinsum("bshk,hkd->bsd", out, p["wo"])
     from repro.models.runtime_flags import residual_axes
     return shard_activation(o, *residual_axes()), cache
 
@@ -256,14 +282,16 @@ def attn_decode(cfg, p, x, positions, cache, *, window=None):
     L = cache["k"].shape[1]
     slot = positions[:, 0] % L                              # (B,)
     bidx = jnp.arange(x.shape[0])
-    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    pay = _kv_payload(cache, k[:, 0], v[:, 0])
     cpos = cache["pos"].at[bidx, slot].set(positions[:, 0])
-    out = naive_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                          positions, cpos, causal=True, window=window,
-                          softcap=cfg.attn.logit_softcap)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
-    new_cache = {"k": ck, "v": cv, "pos": cpos, "len": cache["len"] + 1}
+    new_cache = dict(
+        {key: cache[key].at[bidx, slot].set(val)
+         for key, val in pay.items()},
+        pos=cpos, len=cache["len"] + 1)
+    rk, rv = _cache_read_kv(new_cache, q.dtype)
+    out = naive_attention(q, rk, rv, positions, cpos, causal=True,
+                          window=window, softcap=cfg.attn.logit_softcap)
+    o = qeinsum("bshk,hkd->bsd", out, p["wo"])
     return shard_activation(o, "batch", None, None), new_cache
 
 
@@ -284,8 +312,9 @@ def attn_prefill_chunk(cfg, p, x, positions, cache, *, window=None):
     B, S, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
     L = cache["k"].shape[1]
-    kv_k = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
-    kv_v = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+    ck, cv = _cache_read_kv(cache, q.dtype)
+    kv_k = jnp.concatenate([ck, k], axis=1)
+    kv_v = jnp.concatenate([cv, v], axis=1)
     kv_pos = jnp.concatenate([cache["pos"], positions], axis=1)
     out = naive_attention(q, kv_k, kv_v, positions, kv_pos, causal=True,
                           window=window, softcap=cfg.attn.logit_softcap)
@@ -293,20 +322,20 @@ def attn_prefill_chunk(cfg, p, x, positions, cache, *, window=None):
         k, v, positions = k[:, S - L:], v[:, S - L:], positions[:, S - L:]
     slots = positions % L
     bidx = jnp.arange(B)[:, None]
-    new_cache = {
-        "k": cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype)),
-        "v": cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype)),
-        "pos": cache["pos"].at[bidx, slots].set(positions),
-        "len": cache["len"] + S,
-    }
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    pay = _kv_payload(cache, k, v)
+    new_cache = dict(
+        {key: cache[key].at[bidx, slots].set(val)
+         for key, val in pay.items()},
+        pos=cache["pos"].at[bidx, slots].set(positions),
+        len=cache["len"] + S)
+    o = qeinsum("bshk,hkd->bsd", out, p["wo"])
     return shard_activation(o, "batch", None, None), new_cache
 
 
 def cross_attn_apply(cfg, p, x, enc_kv):
     """Cross-attention (whisper decoder). enc_kv = (k, v) precomputed from
     encoder output: (B, T, Hkv, D) each."""
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = qeinsum("bsd,dhk->bshk", x, p["wq"])
     if cfg.attn.qkv_bias:
         q = q + p["bq"]
     k, v = enc_kv
@@ -314,32 +343,38 @@ def cross_attn_apply(cfg, p, x, enc_kv):
     q_pos = jnp.zeros(q.shape[:2], jnp.int32)
     kv_pos = jnp.zeros((B, T), jnp.int32)
     out = naive_attention(q, k, v, q_pos, kv_pos, causal=False)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    o = qeinsum("bshk,hkd->bsd", out, p["wo"])
     return shard_activation(o, "batch", None, None)
 
 
 def cross_kv(cfg, p, enc_out):
-    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
-    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    k = qeinsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = qeinsum("btd,dhk->bthk", enc_out, p["wv"])
     if cfg.attn.qkv_bias:
         k, v = k + p["bk"], v + p["bv"]
     return k, v
 
 
 def make_cache(cfg, batch, max_len, *, window=None, dtype=jnp.bfloat16,
-               long_ctx=False):
+               long_ctx=False, quantized=False):
     """Allocate a KV cache. Local layers only keep ``window`` slots; global
     layers keep max_len, optionally capped (windowed-global long-ctx
-    variant)."""
+    variant). ``quantized`` stores K/V as int8 with per-(position, head)
+    f32 scale planes alongside (see quant/kv.py)."""
     L = max_len
     if window is not None:
         L = min(L, window)
     elif long_ctx and cfg.attn.long_ctx_window_cap is not None:
         L = min(L, cfg.attn.long_ctx_window_cap)
     hd = cfg.head_dim_
-    return {
-        "k": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+    kv_dtype = jnp.int8 if quantized else dtype
+    cache = {
+        "k": jnp.zeros((batch, L, cfg.n_kv_heads, hd), kv_dtype),
+        "v": jnp.zeros((batch, L, cfg.n_kv_heads, hd), kv_dtype),
         "pos": jnp.full((batch, L), -1, jnp.int32),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+    if quantized:
+        cache["k_scale"] = jnp.zeros((batch, L, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, L, cfg.n_kv_heads), jnp.float32)
+    return cache

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import shard_activation
+from repro.quant.weights import qeinsum
 
 
 # ---------------------------------------------------------------- init utils
@@ -120,12 +121,12 @@ def mlp_init(cfg, rng, d_ff=None, d_in=None):
 
 def mlp_apply(cfg, p, x):
     if cfg.gated_mlp:
-        gu = jnp.einsum("bsd,dcf->bscf", x, p["w_in"])
+        gu = qeinsum("bsd,dcf->bscf", x, p["w_in"])
         gu = shard_activation(gu, "batch", None, None, "model")
         h = act_fn(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
     else:
-        h = act_fn(cfg.act)(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+        h = act_fn(cfg.act)(qeinsum("bsd,df->bsf", x, p["w_up"]))
     h = shard_activation(h, "batch", None, "model")
-    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    out = qeinsum("bsf,fd->bsd", h, p["w_down"])
     from repro.models.runtime_flags import residual_axes
     return shard_activation(out, *residual_axes())

@@ -93,18 +93,21 @@ def init_params(cfg: ModelConfig, rng):
 
 # ------------------------------------------------------------------ caches
 def make_caches(cfg: ModelConfig, batch: int, max_len: int, *,
-                long_ctx: bool = False, dtype=jnp.bfloat16):
+                long_ctx: bool = False, dtype=jnp.bfloat16, kv_quant=None):
     """Stacked (over periods) decode caches/states per pattern position.
 
     Encoder-decoder models additionally carry a cross-attention KV cache
     ('ck'/'cv', filled once at prefill) so decode never re-runs the encoder.
+    ``kv_quant="int8"`` allocates quantized self-attention caches (scale
+    planes included); recurrent states and cross-attention KV stay float.
     """
     caches = {}
     for j, kind in enumerate(cfg.pattern):
         if kind in ATTN_KINDS:
             window = cfg.attn.window if kind == "attn_local" else None
             one = attn_mod.make_cache(cfg, batch, max_len, window=window,
-                                      dtype=dtype, long_ctx=long_ctx)
+                                      dtype=dtype, long_ctx=long_ctx,
+                                      quantized=kv_quant == "int8")
             if cfg.enc_layers > 0:
                 hd = cfg.head_dim_
                 one["ck"] = jnp.zeros((batch, cfg.enc_seq_len,
@@ -150,7 +153,7 @@ def _apply_block(cfg, kind, p, x, positions, cache, *, mode, causal,
                 a = attn_mod.naive_attention(q, k, v, positions, positions,
                                              causal=False, window=None,
                                              softcap=cfg.attn.logit_softcap)
-                a = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+                a = attn_mod.qeinsum("bshk,hkd->bsd", a, p["attn"]["wo"])
             else:
                 a, cache = attn_mod.attn_apply(cfg, p["attn"], h, positions,
                                                window=window, cache=cache)

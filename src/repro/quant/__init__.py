@@ -1,0 +1,20 @@
+"""Quantized serving subsystem: int8 weights + int8 KV cache.
+
+Three layers (see docs/ARCHITECTURE.md, "Quantized serving path"):
+
+  * ``quant.weights`` — symmetric per-channel int8 weight quantization
+    (``quantize_params``) and the ``qeinsum`` apply-site dispatcher the
+    model projections call.
+  * ``quant.policy`` — which layer classes quantize (attn projections +
+    MLP; embeddings/norms/MoE stay in float).
+  * ``quant.kv`` — per-(position, head) int8 KV cache quantize/dequantize
+    used by ``models.attention`` and threaded through ``serving.kvcache``.
+"""
+from repro.quant.kv import (dequantize_kv, quantize_kv,  # noqa: F401
+                            validate_kv_quant)
+from repro.quant.policy import (LAYER_CLASSES, QuantPolicy,  # noqa: F401
+                                default_policy)
+from repro.quant.weights import (dequantize_leaf,  # noqa: F401
+                                 dequantize_params, is_quantized,
+                                 params_bytes, qeinsum, quantize_leaf,
+                                 quantize_params, quantized_leaf_count)

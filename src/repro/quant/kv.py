@@ -1,0 +1,43 @@
+"""int8 KV-cache quantization: per-(position, kv-head) symmetric scales.
+
+The cache layout grows two f32 scale planes next to the int8 K/V buffers:
+
+    k: (B, L, Hkv, D) int8        k_scale: (B, L, Hkv) f32
+    v: (B, L, Hkv, D) int8        v_scale: (B, L, Hkv) f32
+
+One scale per written (position, head) vector — computed at write time
+from that vector's absmax, so storing a new token never has to rescale
+old entries (a per-slot scale would), and a slot copy (lane gather,
+prefix-store load, tier compact/scatter) moves payload + scales with the
+same leaf-generic tree map the float pool uses. Empty positions hold zero
+payload and zero scale; the ``pos = -1`` sentinel masks them in attention
+exactly as in the float cache.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_QUANT_MODES = (None, "int8")
+
+
+def validate_kv_quant(kv_quant) -> None:
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(
+            f"kv_quant must be one of {KV_QUANT_MODES}, got {kv_quant!r}")
+
+
+def quantize_kv(x):
+    """x: (..., D) float -> (int8 (..., D), f32 scale (...,)). Symmetric
+    absmax/127 per trailing vector; all-zero vectors quantize to exact
+    zeros with scale 0."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / 127.0
+    q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0)[..., None])
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    """Invert ``quantize_kv`` at gather time (attention read path)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -1,0 +1,73 @@
+"""Which parameter leaves quantize — the per-layer spec behind
+``quantize_params``.
+
+The paper's cost finding is about the *resident working set*: CPU profiles
+win exactly when weights + KV fit the cache hierarchy, so the policy's job
+is to shrink the big matmul operands while leaving everything whose
+precision is load-bearing (or whose size is negligible) alone:
+
+  * ``attn_proj`` — q/k/v (or fused qkv) projections. Contraction over the
+    leading ``d_model`` axis; per-(head, head_dim) output channels.
+  * ``attn_out``  — the ``wo`` output projection. Contraction over the two
+    leading (heads, head_dim) axes; per-``d_model`` output channels.
+  * ``mlp``       — gate/up/down projections (fused ``w_in`` included).
+
+Everything else stays in its float dtype: embeddings and the (possibly
+tied) lm head (table lookups, and argmax over the vocab is the single most
+drift-sensitive op in greedy serving), norms and biases (tiny, and scale
+parameters amplify), MoE routers and expert stacks (the router decides
+top-k expert assignment — integer noise there reroutes tokens — and the
+expert einsums contract a *middle* axis, outside the leading-contraction
+layout ``qeinsum`` handles), and all recurrent-state parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# leaf name -> (layer class, number of leading contraction axes). The
+# contraction-axis count is what per-channel quantization needs: scales are
+# computed per *output* channel, i.e. over every axis after the contraction.
+_LEAF_SPECS = {
+    "wq": ("attn_proj", 1),
+    "wk": ("attn_proj", 1),
+    "wv": ("attn_proj", 1),
+    "wqkv": ("attn_proj", 1),
+    "wo": ("attn_out", 2),
+    "w_in": ("mlp", 1),
+    "w_up": ("mlp", 1),
+    "w_down": ("mlp", 1),
+}
+
+# parent keys under which the leaf names above mean what the table says;
+# 'mlp' excludes the MoE subtree (parent 'experts'/'shared'), whose einsums
+# contract a middle axis and whose routing is precision-sensitive.
+_PARENTS = {
+    "attn": ("attn_proj", "attn_out"),
+    "cross_attn": ("attn_proj", "attn_out"),
+    "mlp": ("mlp",),
+}
+
+LAYER_CLASSES = ("attn_proj", "attn_out", "mlp")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-layer quantization spec: which layer classes go int8."""
+    classes: frozenset = frozenset(LAYER_CLASSES)
+
+    def n_contract(self, parent: Optional[str], name: str) -> Optional[int]:
+        """Leading contraction-axis count for a quantizable leaf at
+        ``parent/name``, or None when the leaf stays in float."""
+        spec = _LEAF_SPECS.get(name)
+        if spec is None or parent is None:
+            return None
+        cls, nc = spec
+        if cls not in self.classes or cls not in _PARENTS.get(parent, ()):
+            return None
+        return nc
+
+
+def default_policy() -> QuantPolicy:
+    """All three matmul layer classes int8; embeddings/norms/moe stay."""
+    return QuantPolicy()

@@ -1,0 +1,147 @@
+"""Symmetric per-channel int8 weight quantization.
+
+A quantized leaf is a two-array dict ``{"qw": int8, "scale": float32}``
+replacing the float array in the params pytree: ``qw`` keeps the original
+shape, ``scale`` keeps only the output-channel axes (one absmax/127 scale
+per output channel, symmetric — no zero points). The contraction-axis
+count is recoverable as ``qw.ndim - scale.ndim``, so the quantized tree
+needs no side-channel metadata: ``lax.scan`` slicing the stacked period
+axis, jit donation, and the cache-pool tree maps all see plain arrays.
+
+``qeinsum`` is the apply-site entry point: models' projection einsums call
+it instead of ``jnp.einsum`` and it dispatches — float weights take the
+exact pre-quantization einsum (the default path stays bit-identical),
+quantized dicts take the dequant-fused matmul (scales applied at the fp32
+accumulator; no dequantized weight copy is ever materialized, on either
+backend — see ``kernels.ops.matmul_q8``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.policy import QuantPolicy, default_policy
+
+# period-stacked subtrees: leaves below carry a leading (n_periods,) batch
+# axis that quantization must treat as per-layer, not as a channel
+_STACKED_ROOTS = ("blocks", "enc_blocks")
+
+
+def is_quantized(leaf) -> bool:
+    """True for the {'qw', 'scale'} dicts ``quantize_params`` emits."""
+    return isinstance(leaf, dict) and "qw" in leaf and "scale" in leaf
+
+
+def quantize_leaf(w, n_contract: int, n_batch: int = 0) -> dict:
+    """w: (*batch, *contract, *out) -> {'qw': int8 same shape,
+    'scale': f32 (*batch, *out)}. scale = absmax/127 over the contraction
+    axes, per output channel; all-zero channels get scale 0 and quantize
+    (and dequantize) to exact zeros."""
+    wf = w.astype(jnp.float32)
+    caxes = tuple(range(n_batch, n_batch + n_contract))
+    amax = jnp.max(jnp.abs(wf), axis=caxes)
+    scale = amax / 127.0
+    sb = jnp.expand_dims(scale, caxes)
+    q = jnp.round(wf / jnp.where(sb > 0, sb, 1.0))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return {"qw": q, "scale": scale}
+
+
+def dequantize_leaf(leaf, dtype=jnp.float32, n_batch: int = 0):
+    """Reconstruct the float weight (round-trip error <= scale/2 per
+    element — the property tests' bound). ``n_batch`` must match the
+    value quantization used (1 for period-stacked leaves)."""
+    qw, scale = leaf["qw"], leaf["scale"]
+    nc = qw.ndim - scale.ndim
+    caxes = tuple(range(n_batch, n_batch + nc))
+    sb = jnp.expand_dims(scale, caxes)
+    return (qw.astype(jnp.float32) * sb).astype(dtype)
+
+
+def quantize_params(params: dict, spec: Optional[QuantPolicy] = None) -> dict:
+    """Quantize a model param tree per the policy ``spec`` (default: the
+    three matmul layer classes — see ``quant.policy``). Non-selected leaves
+    are passed through by reference; the returned tree is structurally a
+    drop-in for the float one at every ``qeinsum`` apply site."""
+    spec = spec or default_policy()
+
+    def walk(tree, parent, stacked):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, key, stacked or key in _STACKED_ROOTS)
+            else:
+                nc = spec.n_contract(parent, key)
+                if nc is None:
+                    out[key] = val
+                else:
+                    out[key] = quantize_leaf(val, nc,
+                                             n_batch=1 if stacked else 0)
+        return out
+
+    return walk(params, None, False)
+
+
+def dequantize_params(params: dict, dtype=jnp.float32) -> dict:
+    """Invert ``quantize_params`` (up to the per-element scale/2 rounding
+    error) — the round-trip half of the property tests."""
+    def walk(tree, stacked):
+        out = {}
+        for key, val in tree.items():
+            if is_quantized(val):
+                out[key] = dequantize_leaf(val, dtype,
+                                           n_batch=1 if stacked else 0)
+            elif isinstance(val, dict):
+                out[key] = walk(val, stacked or key in _STACKED_ROOTS)
+            else:
+                out[key] = val
+        return out
+    return walk(params, False)
+
+
+def params_bytes(params) -> int:
+    """Device bytes of a (possibly quantized) param tree — the
+    ``weight_bytes`` gauge the engine reports."""
+    return int(sum(x.nbytes for x in jax.tree.leaves(params)))
+
+
+def quantized_leaf_count(params) -> int:
+    n = 0
+
+    def walk(tree):
+        nonlocal n
+        for val in tree.values():
+            if is_quantized(val):
+                n += 1
+            elif isinstance(val, dict):
+                walk(val)
+    walk(params)
+    return n
+
+
+def qeinsum(eq: str, x, w):
+    """Projection einsum with a possibly-quantized weight operand.
+
+    Float ``w``: exactly ``jnp.einsum(eq, x, w)`` — the default serving
+    path keeps its pre-quantization graph bit-for-bit. Quantized ``w``:
+    the einsum family models/ uses (contraction over the trailing axes of
+    ``x`` = the leading axes of ``w``; outputs = x's batch dims then w's
+    output dims, operands in order) collapses to one (M, K) x (K, N)
+    matmul, dispatched to the dequant-fused kernel with the (N,) output-
+    channel scales applied at the fp32 accumulator.
+    """
+    if not is_quantized(w):
+        return jnp.einsum(eq, x, w)
+    from repro.kernels.ops import matmul_q8
+    qw, scale = w["qw"], w["scale"]
+    nc = qw.ndim - scale.ndim
+    lead = x.shape[:x.ndim - nc]
+    K = math.prod(x.shape[x.ndim - nc:])
+    out_shape = qw.shape[nc:]
+    N = math.prod(out_shape)
+    out = matmul_q8(x.reshape(-1, K), qw.reshape(K, N),
+                    scale.reshape(N))
+    return out.reshape(lead + out_shape).astype(x.dtype)

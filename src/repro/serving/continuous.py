@@ -141,7 +141,8 @@ class _Lane:
         if self.staging is None:
             self.staging = CachePool(
                 eng.cfg, eng.ec.max_batch,
-                self.bucket + eng.ec.max_new_tokens, dtype=jnp.float32)
+                self.bucket + eng.ec.max_new_tokens, dtype=jnp.float32,
+                kv_quant=eng.ec.kv_quant)
         return self.staging
 
 

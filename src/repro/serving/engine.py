@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.models import (decode_segment, decode_step, forward, make_caches,
                           prefill_chunk, sample_logits)
+from repro.quant import params_bytes, quantize_params, validate_kv_quant
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationRequest, GenerationResult, HeadFn,
                                RequestHandle, RequestTiming, SamplingParams)
@@ -103,6 +104,17 @@ class EngineConfig:
     # per-bucket byte budget for stored prefix KV; None sizes the store to
     # max_batch slots' worth (LRU eviction keeps it under budget)
     prefix_cache_bytes: Optional[int] = None
+    # weight quantization: "int8" quantizes the matmul layer classes
+    # (attn projections + MLP; see quant/policy.py) to symmetric
+    # per-channel int8 at engine init — projections then run the
+    # dequant-fused matmul with no stored float weight copy. None (the
+    # default) keeps the bf16 path bit-identical.
+    weight_quant: Optional[str] = None
+    # KV-cache quantization: "int8" stores pool slots as int8 K/V with
+    # per-(position, head) f32 scale planes — quantize at scatter,
+    # dequantize at gather; lanes, width tiers and the prefix cache carry
+    # the scale planes unchanged. Decoder mode only.
+    kv_quant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -153,6 +165,20 @@ class ServingEngine:
         self.params = params
         self.ec = engine_cfg
         self.head_fn = head_fn
+        if engine_cfg.weight_quant not in (None, "int8"):
+            raise ValueError(f"weight_quant must be None or 'int8', got "
+                             f"{engine_cfg.weight_quant!r}")
+        validate_kv_quant(engine_cfg.kv_quant)
+        if engine_cfg.kv_quant and engine_cfg.mode != "decoder":
+            raise ValueError("kv_quant requires mode='decoder' (the KV "
+                             "cache only exists on the decode path)")
+        if engine_cfg.weight_quant == "int8":
+            # one-time at init: the matmul layer classes go int8 (policy in
+            # quant/policy.py); everything downstream — warmup, jitted
+            # prefill/segments — traces against the quantized tree, so the
+            # measured windows stay compile-clean with no extra priming
+            self.params = quantize_params(self.params)
+        self._weight_bytes = params_bytes(self.params)
         self._q: "queue.Queue[_Request]" = queue.Queue()
         self._admission = (AdmissionQueue(engine_cfg.max_inflight)
                            if engine_cfg.max_inflight else None)
@@ -738,8 +764,12 @@ class ServingEngine:
         if pool is None:
             pool = CachePool(self.cfg, self.ec.max_batch,
                              bucket + self.ec.max_new_tokens,
-                             dtype=jnp.float32)
+                             dtype=jnp.float32,
+                             kv_quant=self.ec.kv_quant)
             self._pools[bucket] = pool
+            if self.continuous_active:
+                self._lane_stat(bucket)["kv_bytes"] = int(
+                    sum(x.nbytes for x in jax.tree.leaves(pool.caches)))
         return pool
 
     def _prefix_store(self, bucket: int):
@@ -759,7 +789,7 @@ class ServingEngine:
                 self.cfg, self.ec.max_batch,
                 bucket + self.ec.max_new_tokens, C,
                 capacity_bytes=self.ec.prefix_cache_bytes,
-                dtype=jnp.float32)
+                dtype=jnp.float32, kv_quant=self.ec.kv_quant)
             self._prefix_stores[bucket] = store
         return store
 
@@ -768,7 +798,8 @@ class ServingEngine:
         per-batch allocation sweep) or a fresh make_caches tree."""
         if not self.ec.use_cache_pool:
             L = bucket + self.ec.max_new_tokens
-            return make_caches(self.cfg, B, L, dtype=jnp.float32), None
+            return make_caches(self.cfg, B, L, dtype=jnp.float32,
+                               kv_quant=self.ec.kv_quant), None
         pool = self._get_pool(bucket)
         slots, view = pool.acquire([f"b{bucket}.{i}" for i in range(B)])
         return view, (pool, slots)
@@ -913,7 +944,8 @@ class ServingEngine:
                 "prefix_hits": 0, "prefix_misses": 0,
                 "prefix_hit_tokens": 0, "prefix_inserts": 0,
                 "prefix_evictions": 0,
-                "prefix_bytes": 0,   # gauge (see _LANE_GAUGES), not a counter
+                "prefix_bytes": 0,   # gauges (see _LANE_GAUGES), not counters
+                "kv_bytes": 0,       # lane pool KV residency (scales incl.)
                 # segment width -> segments run at it. Every tier is
                 # pre-created (like the outer key set) so the worker only
                 # mutates values — metrics() iterates these dicts from
@@ -946,7 +978,7 @@ class ServingEngine:
         return n
 
     # lane stats reported as current values, not window-diffed deltas
-    _LANE_GAUGES = frozenset({"prefix_bytes"})
+    _LANE_GAUGES = frozenset({"prefix_bytes", "kv_bytes"})
 
     @classmethod
     def _lane_view(cls, now: dict, prev: Optional[dict] = None) -> dict:
@@ -1014,6 +1046,7 @@ class ServingEngine:
         ``window()`` call."""
         m = self._aggregate(self.latencies, self.batch_sizes, self.timings,
                             self._stats)
+        m["weight_bytes"] = self._weight_bytes
         if self.continuous_active:
             m["lanes"] = self._lane_view(self.lane_stats)
             m["jit_compiles"] = self._jit_compiles()
@@ -1049,6 +1082,7 @@ class ServingEngine:
                             span(self.timings, cur["timings"], i_tim),
                             {k: v - cur["stats"].get(k, 0)
                              for k, v in stats_now.items()})
+        m["weight_bytes"] = self._weight_bytes     # gauge, not diffed
         if self.continuous_active:
             m["lanes"] = self._lane_view(lanes_now, cur.get("lanes"))
             compiles = self._jit_compiles()

@@ -98,16 +98,21 @@ def _scatter_prefix(caches, batch, idx):
 
 class CachePool:
     def __init__(self, cfg, n_slots: int, max_len: int, *, long_ctx=False,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, kv_quant=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.kv_quant = kv_quant
+        # kv_quant="int8": slots hold int8 K/V plus per-(position, head)
+        # scale planes — extra leaves that every pool helper (reset/take/
+        # gather/scatter, tier views, prefix load/store) already carries,
+        # being leaf-generic tree maps over the cache dict.
         self.caches = make_caches(cfg, n_slots, max_len, long_ctx=long_ctx,
-                                  dtype=dtype)
+                                  dtype=dtype, kv_quant=kv_quant)
         # single-slot template preserving per-leaf "empty" values (e.g. the
         # attention cache's pos = -1 sentinel)
         self._template = make_caches(cfg, 1, max_len, long_ctx=long_ctx,
-                                     dtype=dtype)
+                                     dtype=dtype, kv_quant=kv_quant)
         self.request_of = [None] * n_slots       # slot -> request id
         self.lengths = [0] * n_slots
 
@@ -463,8 +468,10 @@ class PrefixStore:
     full-slot copies. Owned by the scheduler worker thread."""
 
     def __init__(self, cfg, n_slots: int, max_len: int, chunk: int, *,
-                 capacity_bytes: Optional[int] = None, dtype=jnp.bfloat16):
-        self.pool = CachePool(cfg, n_slots, max_len, dtype=dtype)
+                 capacity_bytes: Optional[int] = None, dtype=jnp.bfloat16,
+                 kv_quant=None):
+        self.pool = CachePool(cfg, n_slots, max_len, dtype=dtype,
+                              kv_quant=kv_quant)
         self.entry_bytes = int(sum(x.nbytes
                                    for x in jax.tree.leaves(self.pool._template)))
         if capacity_bytes is None:

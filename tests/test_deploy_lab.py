@@ -260,6 +260,26 @@ def _encoder_factory(scenario):
     return eng, sents, None
 
 
+def test_engine_summary_reflects_quant_knobs():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base = ServingEngine(cfg, params, EngineConfig(
+        mode="decoder", max_batch=2, pad_buckets=(16,)))
+    quant = ServingEngine(cfg, params, EngineConfig(
+        mode="decoder", max_batch=2, pad_buckets=(16,),
+        weight_quant="int8", kv_quant="int8"))
+    try:
+        b = runner._engine_summary(base)
+        q = runner._engine_summary(quant)
+        assert (b["weight_quant"], b["kv_quant"]) == (None, None)
+        assert (q["weight_quant"], q["kv_quant"]) == ("int8", "int8")
+        assert 0 < q["weight_bytes"] < b["weight_bytes"]
+        json.dumps(q)                             # record stays JSONL-able
+    finally:
+        base.close()
+        quant.close()
+
+
 def test_smoke_grid_records_schema_and_drift_report(tmp_path):
     scenario = runner.WorkloadScenario(name="smoke", ladder=(1, 2),
                                        repeats=1)
@@ -284,6 +304,13 @@ def test_smoke_grid_records_schema_and_drift_report(tmp_path):
         assert row["telemetry"]["n_samples"] >= 1
         assert "requests" in row["engine_window"]
         assert row["engine_window"]["requests"] >= scenario.repeats
+        # v2 schema: the engine dict always carries the quant knobs (None
+        # on the default path) + resident weight bytes
+        assert {"weight_quant", "kv_quant", "weight_bytes"} <= set(
+            row["engine"])
+        assert row["engine"]["weight_quant"] is None
+        assert row["engine"]["kv_quant"] is None
+        assert row["engine"]["weight_bytes"] > 0
         json.dumps(row)                           # JSON-serializable
 
     # --- drift report ------------------------------------------------

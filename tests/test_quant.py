@@ -1,0 +1,319 @@
+"""Quantized serving subsystem: weight int8 round-trip bounds (property),
+policy selection, the dequant-fused matmul vs its reference (Pallas
+interpret + XLA backends), qeinsum parity against dequantize-then-einsum,
+int8 KV round-trip + pool scatter bitwise-stability of untouched slots,
+and the engine knobs — bf16 default stays quant-free, kv_quant="int8"
+serves token-correctly under lanes/tiers/chunked prefill/prefix cache,
+and validation rejects unknown modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ref import int8_matmul_ref
+from repro.models import decode_segment, init_params, make_caches
+from repro.quant import (default_policy, dequantize_kv, dequantize_leaf,
+                         dequantize_params, is_quantized, params_bytes,
+                         qeinsum, quantize_kv, quantize_leaf,
+                         quantize_params, quantized_leaf_count,
+                         validate_kv_quant)
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.kvcache import CachePool
+from repro.serving.scheduler import pick_tier, width_tiers
+
+R = jax.random.PRNGKey
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, R(0))
+RNG = np.random.RandomState(7)
+
+
+def _engine(**kw):
+    base = dict(mode="decoder", max_batch=4, max_new_tokens=6,
+                pad_buckets=(16, 32), decode_segment=2)
+    base.update(kw)
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base))
+
+
+def _prompt(n):
+    return RNG.randint(0, CFG.vocab_size, (n,))
+
+
+# ------------------------------------------------- weight round-trip bound
+@settings(deadline=None, max_examples=10)
+@given(k=st.integers(1, 96), n=st.integers(1, 96),
+       nc=st.integers(1, 2), stacked=st.booleans(),
+       scale_exp=st.integers(-6, 4), seed=st.integers(0, 99))
+def test_quantize_leaf_roundtrip_bound(k, n, nc, stacked, scale_exp, seed):
+    """Property: symmetric per-channel int8 round-trip error is bounded by
+    half a quantization step (scale / 2) everywhere — including extreme
+    magnitudes (scale 2^4) and near-zero leaves (2^-6), for both 1- and
+    2-axis contractions and period-stacked (n_batch=1) leaves."""
+    shape = (k, n) if nc == 1 else (k, 3, n)
+    if stacked:
+        shape = (2,) + shape
+    n_batch = 1 if stacked else 0
+    w = jax.random.normal(R(seed), shape, jnp.float32) * 2.0 ** scale_exp
+    leaf = quantize_leaf(w, nc, n_batch=n_batch)
+    assert is_quantized(leaf) and leaf["qw"].dtype == jnp.int8
+    assert leaf["qw"].shape == shape
+    assert leaf["scale"].shape == shape[:n_batch] + shape[n_batch + nc:]
+    back = dequantize_leaf(leaf, jnp.float32, n_batch=n_batch)
+    # broadcast scale back over the contraction axes for the bound
+    step = np.asarray(leaf["scale"])[
+        (slice(None),) * n_batch + (np.newaxis,) * nc]
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    assert (err <= step / 2 + 1e-12).all()
+
+
+def test_quantize_leaf_zero_channel_exact():
+    w = jnp.zeros((8, 4), jnp.float32).at[:, 1].set(3.0)
+    leaf = quantize_leaf(w, 1)
+    assert float(leaf["scale"][0]) == 0.0          # dead channel: scale 0
+    back = dequantize_leaf(leaf, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_quantize_params_policy_and_bytes():
+    """The default policy quantizes attention + MLP projections only —
+    embeddings/norms/lm_head stay float — and shrinks resident bytes."""
+    qp = quantize_params(PARAMS)
+    assert quantized_leaf_count(qp) > 0
+    assert quantized_leaf_count(PARAMS) == 0
+    assert params_bytes(qp) < params_bytes(PARAMS)
+    assert not is_quantized(qp["embed"])           # policy exclusions
+    flat = {jax.tree_util.keystr(p): l for p, l in
+            jax.tree_util.tree_flatten_with_path(
+                qp, is_leaf=is_quantized)[0]}
+    for path, leaf in flat.items():
+        if "norm" in path or "embed" in path or "lm_head" in path:
+            assert not is_quantized(leaf), path
+    # round trip through the policy stays within the per-leaf bound
+    back = dequantize_params(qp)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(PARAMS)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        bound = 0.5 * float(np.abs(np.asarray(a, np.float32)).max()) / 127
+        assert np.abs(np.asarray(a, np.float32)
+                      - np.asarray(b, np.float32)).max() \
+            <= max(1e-6, bound * 1.001), pa
+
+
+# ------------------------------------------------------ dequant-fused matmul
+@settings(deadline=None, max_examples=8)
+@given(m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150),
+       impl=st.sampled_from(["xla", "pallas"]))
+def test_matmul_q8_matches_ref(m, k, n, impl):
+    x = jax.random.normal(R(m), (m, k), jnp.float32)
+    qw = jax.random.randint(R(n), (k, n), -127, 128, jnp.int8)
+    scale = jax.random.uniform(R(m + n), (n,), jnp.float32, 1e-3, 2e-2)
+    prev = ops.set_quant_matmul_impl(impl)
+    try:
+        out = ops.matmul_q8(x, qw, scale, bm=64, bn=64, bk=64)
+    finally:
+        ops.set_quant_matmul_impl(prev)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(int8_matmul_ref(x, qw, scale)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_int8_matmul_kernel_direct():
+    # block-multiple shapes hit the Pallas kernel without padding
+    x = jax.random.normal(R(0), (128, 256), jnp.float32)
+    qw = jax.random.randint(R(1), (256, 128), -127, 128, jnp.int8)
+    scale = jax.random.uniform(R(2), (128,), jnp.float32, 1e-3, 2e-2)
+    out = int8_matmul(x, qw, scale, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(int8_matmul_ref(x, qw, scale)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("eq,xshape,wshape,nc", [
+    ("bsd,df->bsf", (2, 5, 16), (16, 24), 1),       # mlp up
+    ("bsd,dcf->bscf", (2, 5, 16), (16, 3, 24), 1),  # fused qkv
+    ("bshd,hdf->bsf", (2, 5, 4, 8), (4, 8, 16), 2),  # wo merge
+])
+def test_qeinsum_matches_dequant_einsum(eq, xshape, wshape, nc):
+    """qeinsum on a quantized leaf equals dequantize-then-einsum (no
+    materialized float weights on the fused path), and passes floats
+    through to a bit-identical jnp.einsum."""
+    x = jax.random.normal(R(0), xshape, jnp.bfloat16)
+    w = jax.random.normal(R(1), wshape, jnp.float32) * 0.05
+    np.testing.assert_array_equal(
+        np.asarray(qeinsum(eq, x, w), np.float32),
+        np.asarray(jnp.einsum(eq, x, w), np.float32))
+    leaf = quantize_leaf(w, nc)
+    got = np.asarray(qeinsum(eq, x, leaf), np.float32)
+    want = np.asarray(jnp.einsum(
+        eq, x, dequantize_leaf(leaf, x.dtype)), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------- KV quant
+@settings(deadline=None, max_examples=10)
+@given(h=st.integers(1, 4), d=st.integers(1, 64),
+       scale_exp=st.integers(-6, 4), seed=st.integers(0, 99))
+def test_kv_roundtrip_bound(h, d, scale_exp, seed):
+    x = jax.random.normal(R(seed), (3, h, d), jnp.float32) * 2.0 ** scale_exp
+    q, scale = quantize_kv(x)
+    assert q.dtype == jnp.int8 and scale.shape == (3, h)
+    back = dequantize_kv(q, scale, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= np.asarray(scale)[..., None] / 2 + 1e-12).all()
+
+
+def test_kv_zero_vector_exact():
+    q, scale = quantize_kv(jnp.zeros((2, 2, 8), jnp.bfloat16))
+    assert (np.asarray(q) == 0).all() and (np.asarray(scale) == 0).all()
+    assert (np.asarray(dequantize_kv(q, scale, jnp.bfloat16)) == 0).all()
+
+
+def test_make_caches_kv_quant_layout():
+    from repro.models import make_caches as mk
+    caches = mk(CFG, 2, 24, dtype=jnp.float32, kv_quant="int8")
+    for c in caches.values():
+        assert c["k"].dtype == jnp.int8 and c["v"].dtype == jnp.int8
+        # leading axes may stack period layers; slot planes are the tail
+        assert c["k_scale"].shape[-3:] == (2, 24, CFG.n_kv_heads)
+        assert c["k_scale"].dtype == jnp.float32
+    default = mk(CFG, 2, 24, dtype=jnp.float32)
+    for c in default.values():
+        assert "k_scale" not in c and c["k"].dtype == jnp.float32
+
+
+@settings(deadline=None, max_examples=6)
+@given(mask=st.integers(1, 2 ** 4 - 1), seed=st.integers(0, 50))
+def test_int8_pool_scatter_leaves_other_slots_untouched(mask, seed):
+    """Property (int8 pool): compact-gather -> decode segment -> scatter
+    touches exactly the compacted slots; every other slot's quantized KV
+    *and its scale plane* stay bitwise identical."""
+    slots = [i for i in range(4) if mask >> i & 1]
+    width = pick_tier(len(slots), width_tiers(4))
+    pool = CachePool(CFG, 4, 24, dtype=jnp.float32, kv_quant="int8")
+    leaves, treedef = jax.tree.flatten(pool.caches)
+    keys = jax.random.split(R(seed), len(leaves))
+    pool.caches = jax.tree.unflatten(treedef, [
+        (jax.random.normal(k, l.shape, l.dtype)
+         if jnp.issubdtype(l.dtype, jnp.floating) else
+         jax.random.randint(k, l.shape, -127, 128, l.dtype)
+         if l.dtype == jnp.int8 else l)
+        for k, l in zip(keys, leaves)])
+    before = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    occ = len(slots)
+    idx, view = pool.compact_view(slots, width)
+    _, _, _, out = decode_segment(
+        CFG, PARAMS, jnp.zeros((width, 1), jnp.int32),
+        jnp.full((width, 1), 3, jnp.int32), view, n_steps=2,
+        active=jnp.arange(width) < occ,
+        budget=jnp.full((width,), 5, jnp.int32))
+    pool.scatter_back(slots, out)
+    after = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    others = [i for i in range(4) if i not in slots]
+    changed = False
+    for b, a in zip(before, after):
+        assert (b[:, others] == a[:, others]).all()
+        if not np.array_equal(b[:, slots], a[:, slots]):
+            changed = True
+    assert changed
+
+
+# ------------------------------------------------------------ engine knobs
+def test_default_path_stays_quant_free():
+    """bf16/f32 default: no quantized leaves, no scale planes, and the
+    engine's params object is the caller's (bit-identity with pre-quant
+    engines follows — nothing on the path changed)."""
+    eng = _engine()
+    try:
+        assert eng.params is PARAMS
+        assert quantized_leaf_count(eng.params) == 0
+        pool = eng._get_pool(16)
+        assert all("k_scale" not in c for c in jax.tree.leaves(
+            pool.caches, is_leaf=lambda x: isinstance(x, dict)))
+    finally:
+        eng.close()
+
+
+def test_quant_validation():
+    with pytest.raises(ValueError, match="weight_quant"):
+        _engine(weight_quant="int4")
+    with pytest.raises(ValueError, match="kv_quant"):
+        _engine(kv_quant="fp8")
+    with pytest.raises(ValueError, match="decoder"):
+        ServingEngine(get_config("gector-base", smoke=True),
+                      init_params(get_config("gector-base", smoke=True),
+                                  R(0)),
+                      EngineConfig(mode="encoder", kv_quant="int8"))
+    validate_kv_quant(None)
+    validate_kv_quant("int8")
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                          # lanes, adaptive tiers
+    dict(segment_width="fixed", prefill_chunk=8),    # fixed + chunked
+    dict(prefill_chunk=8, prefix_cache=True),        # prefix sharing
+])
+def test_kv_quant_int8_serves_under_scheduler_features(kw):
+    """kv_quant='int8' must keep every scheduler feature working: lanes
+    across buckets, adaptive + fixed width tiers, chunked prefill, and the
+    prefix cache — completing requests with full token budgets and
+    surfacing the per-lane kv_bytes gauge."""
+    # chunk-aligned shared prefix (2 x prefill_chunk=8) so the cold insert
+    # lands exactly on the shared region and later lookups hit it
+    shared = _prompt(16)
+    prompts = [np.concatenate([shared, _prompt(4)]) for _ in range(3)]
+    prompts.append(_prompt(12))                      # second bucket lane
+    eng = _engine(kv_quant="int8", **kw)
+    try:
+        if kw.get("prefix_cache"):                   # cold insert first
+            assert len(eng.generate(prompts[0])
+                       .result(timeout=300).tokens) == 6
+        hs = [eng.generate(p) for p in prompts]
+        outs = [h.result(timeout=300).tokens for h in hs]
+        assert all(len(o) == 6 for o in outs)
+        m = eng.metrics()
+        assert any(s.get("kv_bytes", 0) > 0 for s in m["lanes"].values())
+        if kw.get("prefix_cache"):
+            assert sum(s.get("prefix_hits", 0)
+                       for s in m["lanes"].values()) >= 1
+    finally:
+        eng.close()
+
+
+def test_kv_quant_adaptive_matches_fixed():
+    """Width-tier compaction must not change tokens under int8 KV — the
+    gather/scatter carries the scale planes with the slots."""
+    prompts = [_prompt(n) for n in (27, 9, 14, 30)]
+    sampling = [SamplingParams(max_new_tokens=t) for t in (6, 2, 5, 3)]
+    outs = {}
+    for mode in ("fixed", "adaptive"):
+        eng = _engine(kv_quant="int8", segment_width=mode)
+        try:
+            hs = [eng.generate(p, s) for p, s in zip(prompts, sampling)]
+            outs[mode] = [h.result(timeout=300).tokens for h in hs]
+        finally:
+            eng.close()
+    for a, b in zip(outs["fixed"], outs["adaptive"]):
+        assert (a == b).all()
+
+
+def test_weight_quant_engine_serves_and_shrinks_weights():
+    eng = _engine(weight_quant="int8", kv_quant="int8")
+    try:
+        assert quantized_leaf_count(eng.params) > 0
+        assert eng.metrics()["weight_bytes"] < params_bytes(PARAMS)
+        h = eng.generate(_prompt(10))
+        assert len(h.result(timeout=300).tokens) == 6
+        assert "weight_bytes" in eng.window()
+    finally:
+        eng.close()
+
+
+def test_default_policy_class_listing():
+    pol = default_policy()
+    assert pol.n_contract("mlp", "w_in") == 1
+    assert pol.n_contract("attn", "wo") == 2
+    assert pol.n_contract("moe", "w_in") is None     # MoE excluded
+    assert pol.n_contract("attn", "norm") is None
