@@ -1,0 +1,29 @@
+"""repro-lint: JAX-aware static analysis over the serving hot path.
+
+The paper's cost finding only holds while the hot path stays tight —
+no stray recompiles, no host syncs inside traced code, no use of a
+buffer after jit donated it, no unlocked touch of cross-thread state.
+Each of those is a *silent* failure mode: the engine keeps producing
+tokens while a measured window quietly pays a compile, or a donated
+cache is read as garbage only on hardware where donation actually
+aliases. This package turns the per-PR vigilance into four AST passes
+(pure stdlib — no jax import, so CI can run them without an
+accelerator stack):
+
+  donation   use-after-donate on ``donate_argnums`` call sites
+  trace      host syncs / Python control flow on traced values inside
+             jit-reachable functions
+  locks      ``# guarded-by:`` discipline for the threaded serving
+             modules
+  recompile  inline ``jax.jit`` at call sites, static-arg mismatches,
+             jitted closures over mutable module state
+
+``tools/lint.py`` is the CLI; ``docs/ANALYSIS.md`` the catalog and the
+annotation / baseline workflow.
+"""
+from repro.analysis.core import (Baseline, BaselineEntry, Finding, Module,
+                                 PASSES, load_modules, register, run_passes)
+from repro.analysis import donation, locks, recompile, trace_safety  # noqa: F401 — register passes
+
+__all__ = ["Baseline", "BaselineEntry", "Finding", "Module", "PASSES",
+           "load_modules", "register", "run_passes"]

@@ -1,0 +1,305 @@
+"""Shared core for the repro-lint passes: parsed-module model, pass
+registry, finding shape, and the baseline (suppression) file.
+
+Everything here is pure stdlib (``ast`` + ``tokenize``) on purpose: the
+CI lint job and the tier-1 meta-test run the whole suite without jax
+installed. Passes never *import* the code they analyse — fixture files
+are free to reference a fake ``jax`` and broken code parses fine.
+
+A pass is a class with ``name``/``description`` and a
+``run(modules) -> [Finding]`` method, registered via ``@register`` so
+``tools/lint.py`` and the tests discover it from one place. Adding a
+pass = one module with one registered class plus fixtures
+(docs/ANALYSIS.md walks through it).
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import io
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+#: pass name -> pass class; filled by @register at import time
+PASSES: Dict[str, type] = {}
+
+
+def register(cls):
+    """Class decorator adding a pass to the global registry."""
+    PASSES[cls.name] = cls
+    return cls
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One problem a pass found.
+
+    ``qualname`` is the enclosing function/class path (``Cls.meth`` or
+    ``<module>``), ``detail`` the stable symbol the finding is about
+    (the donated path, the annotated field, the jitted name ...) —
+    together with ``pass_id`` and ``path`` they form the baseline key,
+    so suppressions survive line-number churn. ``hint`` is the fix
+    suggestion printed after the message.
+    """
+    pass_id: str
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    qualname: str
+    detail: str
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        s = (f"{self.path}:{self.line}:{self.col}: [{self.pass_id}] "
+             f"{self.message}")
+        if self.hint:
+            s += f"  (fix: {self.hint})"
+        return s
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.pass_id, self.detail)
+
+
+class Module:
+    """One parsed source file: AST + per-line comment map.
+
+    Comments come from ``tokenize`` (not regex over lines), so a ``#``
+    inside a string literal never reads as an annotation. Files that
+    fail to tokenize still get an AST-only view.
+    """
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=rel)
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:      # pragma: no cover - defensive
+            pass
+
+    def comment_at(self, line: int) -> str:
+        """Comment text on ``line`` (trailing or standalone), '' if none."""
+        return self.comments.get(line, "")
+
+
+def load_modules(root: Path, paths: Optional[Sequence[Path]] = None
+                 ) -> List[Module]:
+    """Parse every ``.py`` under ``root/src`` (or the explicit ``paths``)
+    into ``Module``s with repo-relative names."""
+    root = Path(root)
+    if paths is None:
+        paths = sorted((root / "src").rglob("*.py"))
+    mods = []
+    for p in paths:
+        p = Path(p)
+        try:
+            rel = p.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = p.name
+        mods.append(Module(p, rel, p.read_text()))
+    return mods
+
+
+def run_passes(modules: Sequence[Module],
+               select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected (default: all registered) passes and return
+    findings in stable (path, line) order."""
+    names = list(select) if select else sorted(PASSES)
+    unknown = [n for n in names if n not in PASSES]
+    if unknown:
+        raise ValueError(f"unknown pass(es): {', '.join(unknown)} "
+                         f"(registered: {', '.join(sorted(PASSES))})")
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(PASSES[name]().run(modules))
+    return sorted(findings, key=Finding.sort_key)
+
+
+# ---------------------------------------------------------------- AST utils
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, None for anything else
+    (calls, subscripts — those are not stable bindings to track)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Last component of a Name/Attribute chain ('c' for ``a.b.c``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def iter_functions(tree: ast.Module) -> Iterator[Tuple[str, ast.AST,
+                                                       Optional[str]]]:
+    """Yield ``(qualname, func_node, enclosing_class_name)`` for every
+    def/async-def in the module, depth-first."""
+
+    def walk(node, prefix: str, cls: Optional[str]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child, cls
+                yield from walk(child, f"{q}.", cls)
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.", child.name)
+            else:
+                yield from walk(child, prefix, cls)
+
+    yield from walk(tree, "", None)
+
+
+def literal_int_or_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Resolve a ``donate_argnums`` / ``static_argnums`` literal: an int
+    or a tuple/list of ints. None when it is computed (not analysable)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            got = literal_int_or_tuple(e)
+            if got is None or len(got) != 1:
+                return None
+            out.append(got[0])
+        return tuple(out)
+    return None
+
+
+def literal_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """A ``static_argnames`` literal: a string or tuple/list of strings."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def is_jax_jit(node: ast.AST) -> bool:
+    """True for a reference to ``jax.jit`` (or bare ``jit`` imported
+    from jax — fixtures use both spellings)."""
+    return dotted(node) in ("jax.jit", "jit")
+
+
+def jit_call_info(call: ast.Call):
+    """If ``call`` constructs a jitted function, return
+    ``(target_node, donate, static_nums, static_names)`` where target is
+    the wrapped callable (Name/Lambda/def-ref) and the rest are resolved
+    keyword literals (None when absent/computed). Handles both
+    ``jax.jit(f, ...)`` and ``functools.partial(jax.jit, ...)`` (the
+    decorator spelling — no target).
+    """
+    if not isinstance(call, ast.Call):
+        return None
+    target = None
+    if is_jax_jit(call.func):
+        target = call.args[0] if call.args else None
+    elif dotted(call.func) in ("functools.partial", "partial") \
+            and call.args and is_jax_jit(call.args[0]):
+        target = call.args[1] if len(call.args) > 1 else None
+    else:
+        return None
+    donate = static_nums = static_names = None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            donate = literal_int_or_tuple(kw.value)
+        elif kw.arg == "static_argnums":
+            static_nums = literal_int_or_tuple(kw.value)
+        elif kw.arg == "static_argnames":
+            static_names = literal_str_tuple(kw.value)
+    return target, donate, static_nums, static_names
+
+
+# ------------------------------------------------------------------ baseline
+@dataclass(frozen=True)
+class BaselineEntry:
+    """One suppression: ``pass | path | scope-glob | detail-glob |
+    justification``. Globs are fnmatch patterns against the finding's
+    qualname / detail, so one justified entry can cover e.g. every
+    lock-free read a documented method performs — without ever
+    suppressing the same pattern in code it was not written for."""
+    pass_id: str
+    path: str
+    scope: str
+    detail: str
+    justification: str
+    lineno: int
+
+    def matches(self, f: Finding) -> bool:
+        return (self.pass_id == f.pass_id
+                and fnmatch.fnmatchcase(f.path, self.path)
+                and fnmatch.fnmatchcase(f.qualname, self.scope)
+                and fnmatch.fnmatchcase(f.detail, self.detail))
+
+
+@dataclass
+class Baseline:
+    """Parsed baseline file + bookkeeping of which entries fired.
+
+    ``errors`` carries format problems (wrong field count, empty
+    justification) — ``--strict`` fails on them, because an unjustified
+    suppression is indistinguishable from a swept-under-the-rug bug.
+    """
+    entries: List[BaselineEntry] = field(default_factory=list)
+    errors: List[str] = field(default_factory=list)
+    _hits: Dict[BaselineEntry, int] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Optional[Path]) -> "Baseline":
+        bl = cls()
+        if path is None or not Path(path).exists():
+            return bl
+        for i, raw in enumerate(Path(path).read_text().splitlines(), 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = [p.strip() for p in line.split("|", 4)]
+            if len(parts) != 5:
+                bl.errors.append(
+                    f"{path}:{i}: expected 'pass | path | scope | detail "
+                    f"| justification', got {len(parts)} field(s)")
+                continue
+            entry = BaselineEntry(*parts[:4], justification=parts[4],
+                                  lineno=i)
+            if not entry.justification:
+                bl.errors.append(f"{path}:{i}: empty justification — every "
+                                 f"suppression must say why it is safe")
+            bl.entries.append(entry)
+        return bl
+
+    def filter(self, findings: Sequence[Finding]) -> List[Finding]:
+        """Drop suppressed findings, recording which entries fired."""
+        kept = []
+        for f in findings:
+            entry = next((e for e in self.entries if e.matches(f)), None)
+            if entry is None:
+                kept.append(f)
+            else:
+                self._hits[entry] = self._hits.get(entry, 0) + 1
+        return kept
+
+    def unused(self) -> List[BaselineEntry]:
+        """Entries that suppressed nothing this run — stale once the
+        underlying code is fixed; ``--strict`` requires their removal."""
+        return [e for e in self.entries if e not in self._hits]

@@ -1,0 +1,240 @@
+"""Donation-safety pass (``donation``): use-after-donate detection.
+
+``jax.jit(..., donate_argnums=k)`` tells XLA it may reuse argument
+``k``'s buffers for the output. On CPU the donated array often survives
+by accident; on TPU/GPU it really is gone, so a later read returns
+garbage *silently* — no exception, just wrong KV. The CachePool
+reset/scatter helpers and the engine's decode segment all donate, so
+the idiom must stay mechanically safe:
+
+    pool.caches = _reset_slots(pool.caches, ...)   # ok: rebound at once
+    out = _reset_slots(pool.caches, ...)
+    use(pool.caches)                               # FLAGGED
+
+The pass resolves donating callables repo-wide, without importing:
+
+  * defs decorated ``@functools.partial(jax.jit, donate_argnums=k)``;
+  * ``name = jax.jit(f, donate_argnums=k)`` bindings;
+  * factory methods that build a donating jit into a cache and return
+    it (the engine's ``self._compiled[...] = jax.jit(fn,
+    donate_argnums=k)`` + ``return self._compiled[...]`` pattern) —
+    their call shape is ``obj.factory()(args...)``.
+
+At each call site it taints the donated argument when that argument is
+a stable dotted binding (``caches``, ``pool.caches``); the taint dies
+when the binding (or a prefix of it) is re-assigned, and any read while
+tainted is a finding. Loop bodies are walked twice so a donation whose
+taint survives to the back edge catches first-statement reads of the
+next iteration. Matching is by terminal callable name, which is exact
+enough for this repo's single-namespace helpers; a same-named
+non-donating function would need a baseline entry, making the
+collision loud instead of silent.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, dotted, iter_functions,
+                                 jit_call_info, register, terminal_name)
+
+
+def _donating_defs(modules: Sequence[Module]):
+    """(donors, factories): terminal callable name -> donated argnums."""
+    donors: Dict[str, Tuple[int, ...]] = {}
+    factories: Dict[str, Tuple[int, ...]] = {}
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    info = jit_call_info(dec) if isinstance(dec, ast.Call) \
+                        else None
+                    if info and info[1]:
+                        donors[node.name] = info[1]
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                info = jit_call_info(node.value)
+                if not (info and info[1]):
+                    continue
+                for tgt in node.targets:
+                    name = terminal_name(tgt)
+                    if name is not None:
+                        donors[name] = info[1]
+        # factory methods: a donating jit stored into a subscripted cache
+        # inside a function makes calls of the form ``obj.meth()(args)``
+        # donate — record the enclosing function's name
+        for qual, fn, _cls in iter_functions(mod.tree):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.Call) and \
+                        any(isinstance(t, ast.Subscript)
+                            for t in node.targets):
+                    info = jit_call_info(node.value)
+                    if info and info[1]:
+                        factories[fn.name] = info[1]
+    return donors, factories
+
+
+class _RW(ast.NodeVisitor):
+    """Collect maximal dotted paths read (Load ctx) and written
+    (Store/Del ctx) by an expression/statement fragment. Nested function
+    bodies are skipped — they run later, under bindings that may have
+    been refreshed by then."""
+
+    def __init__(self):
+        self.loads: List[Tuple[str, int, int]] = []
+        self.stores: List[str] = []
+
+    def _path(self, node):
+        p = dotted(node)
+        if p is None:
+            return None
+        if isinstance(node.ctx, ast.Load):
+            self.loads.append((p, node.lineno, node.col_offset))
+        else:
+            self.stores.append(p)
+        return p
+
+    def visit_Attribute(self, node):
+        if self._path(node) is None:
+            self.generic_visit(node)
+
+    def visit_Name(self, node):
+        self._path(node)
+
+    def visit_FunctionDef(self, node):  # deferred execution
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+
+def _rw(node) -> _RW:
+    v = _RW()
+    v.visit(node)
+    return v
+
+
+@register
+class DonationPass:
+    name = "donation"
+    description = ("use-after-donate: a binding passed as a "
+                   "donate_argnums argument is read before being "
+                   "re-assigned")
+
+    def run(self, modules: Sequence[Module]) -> List[Finding]:
+        donors, factories = _donating_defs(modules)
+        findings: List[Finding] = []
+        for mod in modules:
+            for qual, fn, _cls in iter_functions(mod.tree):
+                findings.extend(self._check_function(
+                    mod, qual, fn, donors, factories))
+        return findings
+
+    # ------------------------------------------------------- one function
+    def _check_function(self, mod, qual, fn, donors, factories):
+        findings: List[Finding] = []
+        seen: Set[Tuple[str, int, int]] = set()
+        # taint: donated path -> (callee, donated line)
+        taint: Dict[str, Tuple[str, int]] = {}
+
+        def donated_args(call: ast.Call):
+            """Paths this call donates, as (path, callee-name) pairs."""
+            fname = terminal_name(call.func)
+            idxs = donors.get(fname) if fname else None
+            if idxs is None and isinstance(call.func, ast.Call):
+                inner = terminal_name(call.func.func)
+                if inner in factories and not call.func.args:
+                    idxs, fname = factories[inner], f"{inner}()"
+            if not idxs:
+                return []
+            out = []
+            for i in idxs:
+                if i < len(call.args):
+                    p = dotted(call.args[i])
+                    if p is not None:
+                        out.append((p, fname, i))
+            return out
+
+        def check_loads(rw: _RW):
+            for p, line, col in rw.loads:
+                for t, (callee, dline, idx) in taint.items():
+                    if p == t or p.startswith(t + "."):
+                        key = (p, line, col)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        findings.append(Finding(
+                            self.name, mod.rel, line, col, qual, t,
+                            f"`{p}` is read after `{t}` was donated to "
+                            f"`{callee}` (donate_argnums includes {idx}) "
+                            f"on line {dline}; the donated buffer may "
+                            f"alias freed memory",
+                            hint="rebind the donated argument from the "
+                                 "call's result before reading it, or "
+                                 "pass a value you will not reuse"))
+
+        def kill(stores):
+            for s in stores:
+                for t in list(taint):
+                    if t == s or t.startswith(s + "."):
+                        del taint[t]
+
+        def handle_stmt(stmt):
+            rw = _rw(stmt)
+            check_loads(rw)
+            new = []
+            for call in ast.walk(stmt):
+                if isinstance(call, ast.Call):
+                    for p, callee, idx in donated_args(call):
+                        new.append((p, callee, call.lineno, idx))
+            kill(rw.stores)
+            for p, callee, line, idx in new:
+                if p not in rw.stores and not any(
+                        p == s or p.startswith(s + ".")
+                        for s in rw.stores):
+                    taint[p] = (callee, line, idx)
+
+        def walk_block(body):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                if isinstance(stmt, ast.If):
+                    check_loads(_rw(stmt.test))
+                    before = dict(taint)
+                    walk_block(stmt.body)
+                    after_body = dict(taint)
+                    taint.clear()
+                    taint.update(before)
+                    walk_block(stmt.orelse)
+                    taint.update(after_body)   # alive on either path: keep
+                elif isinstance(stmt, (ast.For, ast.While)):
+                    check_loads(_rw(stmt.iter if isinstance(stmt, ast.For)
+                                    else stmt.test))
+                    if isinstance(stmt, ast.For):
+                        kill(_rw(stmt.target).stores)
+                    walk_block(stmt.body)
+                    # back edge: taints alive at the loop end reach the
+                    # top of the next iteration — walk the body again
+                    # (findings de-dupe on position)
+                    walk_block(stmt.body)
+                    walk_block(stmt.orelse)
+                elif isinstance(stmt, ast.With):
+                    for item in stmt.items:
+                        check_loads(_rw(item.context_expr))
+                        if item.optional_vars is not None:
+                            kill(_rw(item.optional_vars).stores)
+                    walk_block(stmt.body)
+                elif isinstance(stmt, ast.Try):
+                    walk_block(stmt.body)
+                    for h in stmt.handlers:
+                        walk_block(h.body)
+                    walk_block(stmt.orelse)
+                    walk_block(stmt.finalbody)
+                else:
+                    handle_stmt(stmt)
+
+        walk_block(fn.body)
+        return findings

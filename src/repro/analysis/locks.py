@@ -1,0 +1,236 @@
+"""Lock-discipline pass (``locks``): ``# guarded-by:`` enforcement.
+
+The serving engine is three threads (submitters, the worker, measuring
+clients) sharing one object graph. Which lock protects which field was
+tribal knowledge; this pass makes it a checked annotation. A field is
+declared where it is initialised:
+
+    self._overflow = deque()       # guarded-by: _submit_lock
+    self._stats = Stats()          # guarded-by: worker
+    self._q = queue.Queue()        # guarded-by: threadsafe
+    self.cfg = cfg                 # guarded-by: init
+    self._heap = []                # guarded-by: external
+    self._win_cursor = 0           # guarded-by: client
+
+Guard kinds:
+
+``<lockname>``  access only inside ``with <obj>.<lockname>:`` or in a
+                function whose ``def`` line carries ``# holds:
+                <lockname>`` (for callers that take the lock upstream).
+``worker``      owned by the single worker thread; access only in
+                functions marked ``# holds: worker``.
+``threadsafe``  internally synchronized (queue.Queue, Event, locks
+                themselves) — reads/writes are free.
+``init``        written once in ``__init__``; later *stores* are
+                flagged, reads are free anywhere.
+``external``    internal to the declaring class, callers must hold
+                whatever lock guards the *instance* — any touch from
+                another class is flagged.
+``client``      owned by the measuring client between runs; unenforced
+                (single-threaded by protocol).
+
+Enforcement is name-based and scoped to modules that declare at least
+one annotation (the four serving modules), so an unrelated ``self.lanes``
+elsewhere in the repo is not dragged in. Accesses inside the declaring
+class's ``__init__`` are exempt (construction happens-before sharing).
+Nested defs inherit the enclosing function's ``# holds:`` markers but
+not its ``with`` locks (a closure may run after the block exits).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, register, terminal_name)
+
+_GUARD_RE = re.compile(r"guarded-by:\s*([A-Za-z_]\w*)")
+_HOLDS_RE = re.compile(r"holds:\s*([A-Za-z_]\w*)")
+_KINDS = {"worker", "threadsafe", "init", "external", "client"}
+
+
+class _Decl(NamedTuple):
+    field: str
+    guard: str          # a kind from _KINDS, or a lock attribute name
+    cls: str            # declaring class name
+    rel: str            # declaring module
+
+
+def _collect_decls(modules: Sequence[Module]) -> Dict[str, List[_Decl]]:
+    decls: Dict[str, List[_Decl]] = {}
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for item in node.body:
+                _scan_stmts(mod, node.name, [item], decls, class_body=True)
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and item.name == "__init__":
+                    _scan_stmts(mod, node.name, ast.walk(item), decls)
+    return decls
+
+
+def _scan_stmts(mod, cls, stmts, decls, class_body=False):
+    for stmt in stmts:
+        if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            continue
+        m = _GUARD_RE.search(mod.comment_at(stmt.lineno))
+        if not m:
+            continue
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for tgt in targets:
+            field = None
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "self":
+                field = tgt.attr
+            elif class_body and isinstance(tgt, ast.Name):
+                field = tgt.id
+            if field:
+                decls.setdefault(field, []).append(
+                    _Decl(field, m.group(1), cls, mod.rel))
+
+
+@register
+class LocksPass:
+    name = "locks"
+    description = ("`# guarded-by:` discipline: annotated shared fields "
+                   "accessed outside their lock / owning thread")
+
+    def run(self, modules: Sequence[Module]) -> List[Finding]:
+        decls = _collect_decls(modules)
+        findings: List[Finding] = []
+        if not decls:
+            return findings
+        for mod in modules:
+            if not any(d.rel == mod.rel for ds in decls.values()
+                       for d in ds):
+                continue   # enforcement is opt-in per module
+            findings.extend(self._check_module(mod, decls))
+        return findings
+
+    def _check_module(self, mod: Module, decls) -> List[Finding]:
+        findings: List[Finding] = []
+        seen: Set[Tuple[int, int, str]] = set()
+
+        def fn_holds(fn) -> Set[str]:
+            out = set()
+            for line in range(fn.lineno,
+                              fn.body[0].lineno if fn.body else fn.lineno):
+                out.update(_HOLDS_RE.findall(mod.comment_at(line)))
+            return out
+
+        def check_access(node: ast.Attribute, cls, qual, held, holds,
+                         in_declaring_init):
+            ds = decls.get(node.attr)
+            if not ds:
+                return
+            is_store = not isinstance(node.ctx, ast.Load)
+            ok = False
+            for d in ds:
+                if d.cls == cls and in_declaring_init:
+                    ok = True
+                elif d.guard == "threadsafe" or d.guard == "client":
+                    ok = True
+                elif d.guard == "worker":
+                    ok = "worker" in holds
+                elif d.guard == "init":
+                    ok = not is_store
+                elif d.guard == "external":
+                    ok = d.cls == cls
+                else:                      # a lock attribute name
+                    ok = d.guard in held or d.guard in holds
+                if ok:
+                    return
+            d = ds[0]
+            key = (node.lineno, node.col_offset, node.attr)
+            if key in seen:
+                return
+            seen.add(key)
+            what = "written" if is_store else "read"
+            if d.guard == "worker":
+                msg = (f"`.{node.attr}` is worker-thread state "
+                       f"(guarded-by: worker) but is {what} in "
+                       f"`{qual}`, which is not marked `# holds: worker`")
+                hint = ("mark the function `# holds: worker` if it only "
+                        "runs on the worker thread, or route through the "
+                        "request queue")
+            elif d.guard == "init":
+                msg = (f"`.{node.attr}` is init-only (guarded-by: init) "
+                       f"but is re-assigned in `{qual}` after "
+                       f"construction")
+                hint = ("treat the field as immutable; build a new value "
+                        "in __init__ or pick a real guard")
+            elif d.guard == "external":
+                msg = (f"`.{node.attr}` is internal to `{d.cls}` "
+                       f"(guarded-by: external) but is {what} from "
+                       f"`{qual}`")
+                hint = (f"go through `{d.cls}`'s methods and hold the "
+                        f"lock that guards the instance")
+            else:
+                msg = (f"`.{node.attr}` (guarded-by: {d.guard}) is "
+                       f"{what} in `{qual}` outside `with "
+                       f"...{d.guard}:`")
+                hint = (f"wrap the access in `with self.{d.guard}:`, or "
+                        f"mark the function `# holds: {d.guard}` if the "
+                        f"caller already owns it")
+            findings.append(Finding(
+                self.name, mod.rel, node.lineno, node.col_offset, qual,
+                node.attr, msg, hint))
+
+        def walk(body, cls, qual, held: Set[str], holds: Set[str],
+                 in_declaring_init: bool):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    q = f"{qual}.{stmt.name}" if qual else stmt.name
+                    init = stmt.name == "__init__"
+                    walk(stmt.body, cls, q, set(),
+                         holds | fn_holds(stmt), init)
+                elif isinstance(stmt, ast.ClassDef):
+                    walk(stmt.body, stmt.name, stmt.name, set(), set(),
+                         False)
+                elif isinstance(stmt, ast.With):
+                    now = set(held)
+                    for item in stmt.items:
+                        name = terminal_name(item.context_expr)
+                        if name:
+                            now.add(name)
+                        scan_exprs(item.context_expr, cls, qual, held,
+                                   holds, in_declaring_init)
+                    walk_stmt_children(stmt.body, cls, qual, now, holds,
+                                       in_declaring_init)
+                else:
+                    scan_exprs(stmt, cls, qual, held, holds,
+                               in_declaring_init)
+                    for attr, blocks in _nested_blocks(stmt):
+                        walk(blocks, cls, qual, held, holds,
+                             in_declaring_init)
+
+        def walk_stmt_children(body, *ctx):
+            walk(body, *ctx)
+
+        def scan_exprs(node, cls, qual, held, holds, in_init):
+            """Check every annotated-attribute access in ``node``,
+            without descending into nested defs or nested statement
+            blocks (those are handled by walk with updated context)."""
+            if isinstance(node, ast.Attribute):
+                check_access(node, cls, qual, held, holds, in_init)
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef, ast.Lambda, ast.stmt)):
+                    continue           # handled by walk / deferred
+                scan_exprs(child, cls, qual, held, holds, in_init)
+
+        def _nested_blocks(stmt):
+            for field_name in ("body", "orelse", "finalbody"):
+                blocks = getattr(stmt, field_name, None)
+                if blocks and isinstance(blocks, list) \
+                        and blocks and isinstance(blocks[0], ast.stmt):
+                    yield field_name, blocks
+            for h in getattr(stmt, "handlers", []) or []:
+                yield "handler", h.body
+
+        walk(mod.tree.body, None, "<module>", set(), set(), False)
+        return findings

@@ -1,0 +1,245 @@
+"""Recompile-hazard pass (``recompile``): jit cache-defeat patterns.
+
+``jax.jit`` caches compiled programs *on the wrapper object*. Build the
+wrapper in the wrong place and the cache is thrown away while the code
+still "works" — each call silently pays a full XLA compile (seconds)
+where the steady state should pay microseconds. The engine's
+``jit_compiles`` counter catches this at runtime, *after* it has cost a
+measured window; this pass catches it at review time:
+
+  * inline construction at the call site —
+    ``jax.jit(f, ...)(args)`` builds wrapper + empty cache per call
+    (the original ``core/gector.py`` bug); ``jax.jit(...).lower(...)``
+    is exempt, that is the deliberate AOT idiom;
+  * ``jax.jit`` constructed inside a ``for``/``while`` body — one
+    fresh cache per iteration;
+  * static-arg mismatches against a resolvable target def:
+    ``static_argnums`` out of range, ``static_argnames`` naming a
+    parameter that does not exist (jit raises only on first call), and
+    list/dict/set literals passed in a static position (unhashable →
+    ``TypeError`` at call time);
+  * jitted functions closing over *rebound* module globals — a global
+    that is assigned more than once at module scope or via ``global``
+    inside a function is baked in at trace time, so later rebinds are
+    silently ignored. Constant module globals are fine and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, iter_functions,
+                                 jit_call_info, register, terminal_name)
+
+
+def _parents(tree) -> Dict[ast.AST, ast.AST]:
+    out: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            out[child] = node
+    return out
+
+
+def _positional_params(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _rebound_globals(tree) -> Set[str]:
+    """Module-level names assigned more than once, or rebound through a
+    ``global`` declaration inside a function."""
+    counts: Dict[str, int] = {}
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            targets = [stmt.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    counts[n.id] = counts.get(n.id, 0) + 1
+    rebound = {n for n, c in counts.items() if c > 1}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            rebound.update(n for n in node.names if n in counts)
+    return rebound
+
+
+def _local_names(fn) -> Set[str]:
+    names: Set[str] = set(_positional_params(fn))
+    names.update(p.arg for p in fn.args.kwonlyargs)
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and not isinstance(node.ctx, ast.Load):
+            names.add(node.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            names.add(node.name)
+    return names
+
+
+@register
+class RecompilePass:
+    name = "recompile"
+    description = ("jit cache-defeat: inline jax.jit at call sites, jit "
+                   "in loops, static-arg mismatches, closures over "
+                   "rebound module globals")
+
+    def run(self, modules: Sequence[Module]) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            findings.extend(self._check_module(mod))
+        return findings
+
+    def _check_module(self, mod: Module) -> List[Finding]:
+        findings: List[Finding] = []
+        parents = _parents(mod.tree)
+        quals = {fn: q for q, fn, _c in iter_functions(mod.tree)}
+        defs_by_name: Dict[str, ast.AST] = {}
+        for q, fn, _c in iter_functions(mod.tree):
+            defs_by_name.setdefault(fn.name, fn)
+
+        def qual_of(node) -> str:
+            cur = parents.get(node)
+            while cur is not None:
+                if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    return quals.get(cur, cur.name)
+                cur = parents.get(cur)
+            return "<module>"
+
+        def flag(node, detail, message, hint):
+            findings.append(Finding(
+                self.name, mod.rel, node.lineno, node.col_offset,
+                qual_of(node), detail, message, hint))
+
+        #: jit-wrapped bindings with literal static_argnums, for the
+        #: unhashable-static call-site check: name -> static indices
+        static_bindings: Dict[str, Tuple[int, ...]] = {}
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            info = jit_call_info(node)
+            if info is None:
+                continue
+            target, _donate, static_nums, static_names = info
+            tname = terminal_name(target) if target is not None else None
+            detail = tname or "jax.jit"
+
+            parent = parents.get(node)
+            if isinstance(parent, ast.Call) and parent.func is node:
+                # jax.jit(...)(args) — the gector.py:75 shape.
+                # (jax.jit(...).lower(...) has an Attribute parent and
+                # is the sanctioned AOT path.)
+                flag(parent, detail,
+                     f"inline `jax.jit({detail or '...'})` called "
+                     f"directly at the call site: a fresh wrapper — and "
+                     f"an empty compile cache — is built on every call",
+                     hint="hoist the jit to a module-level (or cached) "
+                          "binding so compiled programs are reused")
+
+            cur = parent
+            while cur is not None and not isinstance(
+                    cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda, ast.Module)):
+                if isinstance(cur, (ast.For, ast.While)):
+                    flag(node, detail,
+                         f"`jax.jit` constructed inside a "
+                         f"`{'for' if isinstance(cur, ast.For) else 'while'}"
+                         f"` loop: each iteration builds a new wrapper "
+                         f"and recompiles from scratch",
+                         hint="hoist the jit construction above the loop")
+                    break
+                cur = parents.get(cur)
+
+            # static-arg validation against a same-module target def
+            target_def = defs_by_name.get(tname) if tname else None
+            if target_def is not None:
+                params = _positional_params(target_def)
+                all_params = set(params) | {p.arg for p in
+                                            target_def.args.kwonlyargs}
+                for i in static_nums or ():
+                    if not (0 <= i < len(params)):
+                        flag(node, detail,
+                             f"static_argnums includes {i} but "
+                             f"`{tname}` has only {len(params)} "
+                             f"positional parameter(s) — jit raises on "
+                             f"first call",
+                             hint="fix the index (or use static_argnames)")
+                for s in static_names or ():
+                    if s not in all_params:
+                        flag(node, detail,
+                             f"static_argnames includes '{s}' which is "
+                             f"not a parameter of `{tname}` — jit "
+                             f"raises on first call",
+                             hint="match static_argnames to the "
+                                  "target's signature")
+
+            if static_nums:
+                assign = parents.get(node)
+                if isinstance(assign, ast.Assign):
+                    for t in assign.targets:
+                        n = terminal_name(t)
+                        if n:
+                            static_bindings[n] = static_nums
+
+        # unhashable literals in static positions at call sites
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = terminal_name(node.func)
+            idxs = static_bindings.get(fname) if fname else None
+            for i in idxs or ():
+                if i < len(node.args) and isinstance(
+                        node.args[i], (ast.List, ast.Dict, ast.Set)):
+                    flag(node.args[i], fname,
+                         f"mutable literal passed in static position "
+                         f"{i} of jitted `{fname}`: statics must be "
+                         f"hashable (TypeError at call time) and every "
+                         f"distinct value recompiles",
+                         hint="pass a tuple / frozen value, or make the "
+                              "argument traced")
+
+        # jitted closures over rebound module globals
+        rebound = _rebound_globals(mod.tree)
+        if rebound:
+            jitted: Set[ast.AST] = set()
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if (isinstance(dec, ast.Call)
+                                and jit_call_info(dec)) or \
+                                terminal_name(dec) == "jit":
+                            jitted.add(node)
+                elif isinstance(node, ast.Call):
+                    info = jit_call_info(node)
+                    if info and isinstance(info[0], ast.Name) \
+                            and info[0].id in defs_by_name:
+                        jitted.add(defs_by_name[info[0].id])
+            for fn in jitted:
+                local = _local_names(fn)
+                reported: Set[str] = set()
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Name) \
+                            and isinstance(node.ctx, ast.Load) \
+                            and node.id in rebound \
+                            and node.id not in local \
+                            and node.id not in reported:
+                        reported.add(node.id)
+                        flag(node, node.id,
+                             f"jitted `{fn.name}` closes over module "
+                             f"global `{node.id}`, which is rebound "
+                             f"elsewhere: the traced value is baked in "
+                             f"at first call and later rebinds are "
+                             f"silently ignored",
+                             hint="pass the value as an argument (traced "
+                                  "or static) instead of reading a "
+                                  "mutable global")
+        return findings

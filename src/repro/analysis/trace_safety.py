@@ -1,0 +1,243 @@
+"""Trace-safety pass (``trace``): host syncs inside jitted functions.
+
+A jitted function body runs once at trace time with abstract tracers.
+Anything that needs a *concrete* value — ``.item()``, ``float()/int()/
+bool()`` on an array, ``np.asarray`` — either blocks on a device→host
+transfer every call (killing the latency the paper measures) or raises
+``TracerConversionError`` only on the first real trace. ``time.time``
+inside a trace is worse: it runs once and bakes a constant timestamp
+into the compiled program. Python ``if``/``while`` on a traced value is
+the classic ``ConcretizationTypeError``.
+
+Roots are functions the repo *directly* jits — ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` decorators, ``jax.jit(f, ...)``
+references resolved to defs in the same module — no transitive
+call-graph propagation (helpers that also run under trace are covered
+where it matters: they are jitted themselves). Taint starts at the
+traced parameters (all params minus ``static_argnums`` /
+``static_argnames``) and flows through assignments. Reads that produce
+static values stay clean: ``x.shape`` / ``.ndim`` / ``.dtype`` /
+``.size``, ``len(x)``, and ``x is None`` comparisons (resolved at trace
+time, no sync).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, dotted, iter_functions,
+                                 jit_call_info, register)
+
+#: calls that are host-side no matter what they are applied to
+_HOST_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "time.time", "time.perf_counter", "time.monotonic",
+}
+
+#: attribute reads yielding static (trace-time) values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _jit_roots(mod: Module) -> Dict[ast.AST, Set[str]]:
+    """Map directly-jitted def nodes -> static parameter names."""
+    by_name: Dict[str, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, node)
+
+    roots: Dict[ast.AST, Set[str]] = {}
+
+    def add(fn, static_nums, static_names):
+        statics = roots.setdefault(fn, set())
+        params = _param_names(fn)
+        for i in static_nums or ():
+            if 0 <= i < len(params):
+                statics.add(params[i])
+        statics.update(static_names or ())
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if dotted(dec) in ("jax.jit", "jit"):
+                    add(node, None, None)
+                elif isinstance(dec, ast.Call):
+                    info = jit_call_info(dec)
+                    if info:
+                        add(node, info[2], info[3])
+        elif isinstance(node, ast.Call):
+            info = jit_call_info(node)
+            if info and isinstance(info[0], ast.Name) \
+                    and info[0].id in by_name:
+                add(by_name[info[0].id], info[2], info[3])
+    return roots
+
+
+class _Taint(ast.NodeVisitor):
+    """Is any tainted name read by this expression, ignoring reads that
+    produce static values?"""
+
+    def __init__(self, taint: Set[str]):
+        self.taint = taint
+        self.hit: Optional[ast.Name] = None
+
+    def visit_Name(self, node):
+        if isinstance(node.ctx, ast.Load) and node.id in self.taint \
+                and self.hit is None:
+            self.hit = node
+
+    def visit_Attribute(self, node):
+        if node.attr in _STATIC_ATTRS:
+            return                      # x.shape et al. are trace-static
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return                      # len(x) is the static leading dim
+        self.generic_visit(node)
+
+    def visit_Compare(self, node):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                      # `x is None` resolves at trace time
+        self.generic_visit(node)
+
+    def visit_Lambda(self, node):       # deferred; not this trace step
+        pass
+
+    visit_FunctionDef = visit_Lambda
+    visit_AsyncFunctionDef = visit_Lambda
+
+
+def _tainted(expr, taint: Set[str]) -> Optional[ast.Name]:
+    v = _Taint(taint)
+    v.visit(expr)
+    return v.hit
+
+
+@register
+class TracePass:
+    name = "trace"
+    description = ("host syncs (.item(), float/int/bool on arrays, "
+                   "np.asarray, time.time) and Python control flow on "
+                   "traced values inside jitted functions")
+
+    def run(self, modules: Sequence[Module]) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            roots = _jit_roots(mod)
+            if not roots:
+                continue
+            quals = {fn: q for q, fn, _c in iter_functions(mod.tree)}
+            for fn, statics in roots.items():
+                findings.extend(self._check_root(
+                    mod, quals.get(fn, fn.name), fn, statics))
+        return findings
+
+    def _check_root(self, mod, qual, fn, statics: Set[str]):
+        findings: List[Finding] = []
+        seen: Set[Tuple[int, int, str]] = set()
+        taint: Set[str] = {p for p in _param_names(fn)
+                           if p not in statics and p not in ("self", "cls")}
+        taint.update(p.arg for p in fn.args.kwonlyargs
+                     if p.arg not in statics)
+
+        def flag(node, detail, message, hint):
+            key = (node.lineno, node.col_offset, detail)
+            if key not in seen:
+                seen.add(key)
+                findings.append(Finding(
+                    self.name, mod.rel, node.lineno, node.col_offset,
+                    qual, detail, message, hint))
+
+        def check_expr(expr):
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                path = dotted(node.func)
+                if path in _HOST_CALLS:
+                    flag(node, path,
+                         f"`{path}` inside jitted `{fn.name}` runs on the "
+                         f"host: a forced device sync (or, for time.*, a "
+                         f"constant baked in at trace time)",
+                         hint="move host-side work outside the jitted "
+                              "function, or use jnp equivalents")
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    flag(node, ".item()",
+                         f"`.item()` inside jitted `{fn.name}` forces a "
+                         f"device→host sync on every call",
+                         hint="keep the value as a traced array; convert "
+                              "outside the jit boundary")
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in ("float", "int", "bool") \
+                        and node.args:
+                    hit = _tainted(node.args[0], taint)
+                    if hit is not None:
+                        flag(node, f"{node.func.id}({hit.id})",
+                             f"`{node.func.id}()` on traced value "
+                             f"`{hit.id}` inside jitted `{fn.name}` is a "
+                             f"host sync (TracerConversionError on "
+                             f"abstract tracers)",
+                             hint="use jnp ops on the traced value, or "
+                                  "mark the parameter static")
+
+        def walk_block(body):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                if isinstance(stmt, (ast.If, ast.While)):
+                    check_expr(stmt.test)
+                    hit = _tainted(stmt.test, taint)
+                    if hit is not None:
+                        kw = "while" if isinstance(stmt, ast.While) else "if"
+                        flag(stmt, f"{kw} {hit.id}",
+                             f"Python `{kw}` on traced value `{hit.id}` "
+                             f"inside jitted `{fn.name}` raises "
+                             f"ConcretizationTypeError at trace time",
+                             hint="use jnp.where / lax.cond / lax."
+                                  "while_loop, or mark the parameter "
+                                  "static")
+                    walk_block(stmt.body)
+                    walk_block(getattr(stmt, "orelse", []))
+                elif isinstance(stmt, ast.For):
+                    check_expr(stmt.iter)
+                    # the loop *target* is not treated as traced: repo
+                    # loops iterate static ranges / layer lists
+                    walk_block(stmt.body)
+                    walk_block(stmt.body)
+                    walk_block(stmt.orelse)
+                elif isinstance(stmt, ast.With):
+                    for item in stmt.items:
+                        check_expr(item.context_expr)
+                    walk_block(stmt.body)
+                elif isinstance(stmt, ast.Try):
+                    walk_block(stmt.body)
+                    for h in stmt.handlers:
+                        walk_block(h.body)
+                    walk_block(stmt.orelse)
+                    walk_block(stmt.finalbody)
+                elif isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                       ast.AugAssign)):
+                    value = stmt.value
+                    if value is not None:
+                        check_expr(value)
+                    targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                        else [stmt.target]
+                    names = [n.id for t in targets
+                             for n in ast.walk(t)
+                             if isinstance(n, ast.Name)]
+                    if value is not None and _tainted(value, taint):
+                        taint.update(names)
+                    elif isinstance(stmt, ast.Assign):
+                        for n in names:   # overwritten with a static value
+                            taint.discard(n)
+                else:
+                    check_expr(stmt)
+
+        walk_block(fn.body)
+        return findings

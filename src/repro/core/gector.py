@@ -68,11 +68,17 @@ def gector_loss(cfg, params, batch, *, keep_weight: float = 0.2):
     return loss, {"tag_acc": acc, "edit_acc": edit_acc}
 
 
+#: module-level jit so predict_tags reuses one compile cache across calls
+#: (an inline jax.jit(...)(...) here rebuilt the wrapper — and recompiled —
+#: on every batch; the repro-lint `recompile` pass guards the pattern now)
+_jit_gector_forward = jax.jit(gector_forward, static_argnums=0)
+
+
 def predict_tags(cfg, params, tokens_batch: np.ndarray,
                  mask: np.ndarray, *, min_error_prob: float = 0.0):
     """Argmax tags, optionally gated by the detect head (GECToR's
     confidence-bias trick)."""
-    tag_logits, det_logits = jax.jit(gector_forward, static_argnums=0)(
+    tag_logits, det_logits = _jit_gector_forward(
         cfg, params, jnp.asarray(tokens_batch))
     tags = np.asarray(jnp.argmax(tag_logits, -1))
     if min_error_prob > 0:

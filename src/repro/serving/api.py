@@ -156,10 +156,10 @@ class RequestHandle:
     """
 
     def __init__(self, request: GenerationRequest, future: Future):
-        self.request = request
-        self.future = future
-        self._stream: "queue.Queue" = queue.Queue()
-        self._cancel = Event()
+        self.request = request            # guarded-by: init
+        self.future = future              # guarded-by: threadsafe
+        self._stream: "queue.Queue" = queue.Queue()  # guarded-by: threadsafe
+        self._cancel = Event()            # guarded-by: threadsafe
         future.add_done_callback(lambda _f: self._stream.put(_STREAM_END))
 
     # ---------------------------------------------------- future protocol

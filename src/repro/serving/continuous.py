@@ -109,23 +109,23 @@ class _Lane:
     """
 
     def __init__(self, eng, bucket: int):
-        self._eng = eng
-        self.bucket = bucket
-        self.staging: Optional[CachePool] = None   # warmup() or first chunk
+        self._eng = eng                  # guarded-by: init
+        self.bucket = bucket             # guarded-by: init
+        self.staging: Optional[CachePool] = None   # guarded-by: worker
         n = eng.ec.max_batch
-        self.last_tok = np.zeros(n, np.int32)   # token each row just made
-        self.pos = np.zeros(n, np.int32)        # its absolute position
-        self.active = np.zeros(n, bool)
-        self.budget = np.zeros(n, np.int32)     # tokens left to emit
-        self.eos = np.full(n, -1, np.int32)
-        self.temp = np.zeros(n, np.float32)
-        self.topk = np.zeros(n, np.int32)
-        self.seed = np.zeros(n, np.int32)
-        self.rows: Dict[int, _Row] = {}         # slot -> _Row (decoding)
-        self.fills: List[_Fill] = []            # chunked prefills in flight
+        self.last_tok = np.zeros(n, np.int32)   # guarded-by: worker — last sampled
+        self.pos = np.zeros(n, np.int32)        # guarded-by: worker — abs position
+        self.active = np.zeros(n, bool)         # guarded-by: worker
+        self.budget = np.zeros(n, np.int32)     # guarded-by: worker — tokens left
+        self.eos = np.full(n, -1, np.int32)     # guarded-by: worker
+        self.temp = np.zeros(n, np.float32)     # guarded-by: worker
+        self.topk = np.zeros(n, np.int32)       # guarded-by: worker
+        self.seed = np.zeros(n, np.int32)       # guarded-by: worker
+        self.rows: Dict[int, _Row] = {}         # guarded-by: worker — slot -> _Row
+        self.fills: List[_Fill] = []            # guarded-by: worker — chunked prefills
 
     @property
-    def busy(self) -> bool:
+    def busy(self) -> bool:  # holds: worker
         return bool(self.rows or self.fills)
 
     @property
@@ -137,7 +137,7 @@ class _Lane:
         buckets the workload never touches."""
         return self._eng._get_pool(self.bucket)
 
-    def get_staging(self, eng) -> CachePool:
+    def get_staging(self, eng) -> CachePool:  # holds: worker
         if self.staging is None:
             self.staging = CachePool(
                 eng.cfg, eng.ec.max_batch,
@@ -148,21 +148,21 @@ class _Lane:
 
 class ContinuousScheduler:
     def __init__(self, engine):
-        self.eng = engine
+        self.eng = engine                # guarded-by: init
         # every lane exists up front (device pools stay lazy — see
         # _Lane.pool): the worker's idle/busy checks iterate this dict,
         # and lazily inserting lanes from warmup or client threads raced
         # that iteration — part of the first-traffic warm-in
-        self.lanes: Dict[int, _Lane] = {
+        self.lanes: Dict[int, _Lane] = {  # guarded-by: worker
             b: _Lane(engine, b) for b in engine.ec.pad_buckets}
-        self.pending = LaneQueue()              # per-bucket pending queues
-        self._rr = 0                            # round-robin cursor
+        self.pending = LaneQueue()              # guarded-by: worker — pending queues
+        self._rr = 0                            # guarded-by: worker — round-robin
 
-    def _lane(self, bucket: int) -> _Lane:
+    def _lane(self, bucket: int) -> _Lane:  # holds: worker
         return self.lanes[bucket]
 
     # ------------------------------------------------------------ worker
-    def run(self):
+    def run(self):  # holds: worker
         eng = self.eng
         try:
             while not eng._stop.is_set():
@@ -179,7 +179,7 @@ class ContinuousScheduler:
         finally:
             self._shutdown()
 
-    def _drain(self, block: bool) -> None:
+    def _drain(self, block: bool) -> None:  # holds: worker
         """Move newly submitted requests into their lane's pending queue;
         when idle, block briefly so the loop doesn't spin."""
         eng = self.eng
@@ -193,7 +193,7 @@ class ContinuousScheduler:
         except queue.Empty:
             pass
 
-    def _next_lane(self) -> Optional[_Lane]:
+    def _next_lane(self) -> Optional[_Lane]:  # holds: worker
         """Round-robin over lanes with in-flight work, so no bucket's
         decode starves while another bucket is busy."""
         busy = [l for l in self.lanes.values() if l.busy]
@@ -202,7 +202,7 @@ class ContinuousScheduler:
         self._rr = (self._rr + 1) % len(busy)
         return busy[self._rr]
 
-    def _step(self, lane: _Lane) -> None:
+    def _step(self, lane: _Lane) -> None:  # holds: worker
         """One scheduler turn for a lane: advance its chunked prefills by
         one chunk, then run one decode segment for its in-flight rows —
         the interleave that bounds how long a join can stall decode."""
@@ -212,7 +212,7 @@ class ContinuousScheduler:
             self._segment(lane)
 
     # --------------------------------------------------------- admission
-    def _admit(self) -> None:
+    def _admit(self) -> None:  # holds: worker
         eng = self.eng
         if not self.pending:
             return
@@ -281,7 +281,7 @@ class ContinuousScheduler:
                 self._begin_fills(fills, lane, entries=fill_entries)
 
     # ----------------------------------------------- whole-prompt prefill
-    def _prefill(self, claimed, lane: _Lane) -> None:
+    def _prefill(self, claimed, lane: _Lane) -> None:  # holds: worker
         """Prefill-into-slot: fill the new rows' KV straight into pool
         slots and emit their first token; they join the in-flight set for
         the next segment. A failure anywhere (compile error, pool
@@ -301,7 +301,7 @@ class ContinuousScheduler:
                 if id(r) not in live and not r.future.done():
                     r.future.set_exception(e)
 
-    def _prefill_inner(self, claimed, lane: _Lane) -> None:
+    def _prefill_inner(self, claimed, lane: _Lane) -> None:  # holds: worker
         eng = self.eng
         t0 = time.perf_counter()
         B, bucket, pool = len(claimed), lane.bucket, lane.pool
@@ -334,7 +334,7 @@ class ContinuousScheduler:
                             temp=float(temp[i]), topk=int(topk[i]),
                             seed=int(seed[i]), now=t1)
 
-    def _start_row(self, lane: _Lane, r, slot: int, tok: int, plen: int, *,
+    def _start_row(self, lane: _Lane, r, slot: int, tok: int, plen: int, *,  # holds: worker
                    budget: int, eos: int, temp: float, topk: int, seed: int,
                    now: float) -> None:
         """Install a freshly prefilled request as an in-flight decode row
@@ -355,7 +355,7 @@ class ContinuousScheduler:
             lane.active[slot] = True
 
     # ----------------------------------------------- prefix-cache fast path
-    def _prefill_hits(self, claimed, lane: _Lane) -> None:
+    def _prefill_hits(self, claimed, lane: _Lane) -> None:  # holds: worker
         """Admit requests whose prompt matched a stored prefix and whose
         unseen suffix fits one chunk: copy-on-reference the stored KV into
         lane slots (one fused gather/scatter) and run a single suffix
@@ -375,7 +375,7 @@ class ContinuousScheduler:
                 if id(r) not in live and not r.future.done():
                     r.future.set_exception(e)
 
-    def _prefill_hits_inner(self, claimed, lane: _Lane) -> None:
+    def _prefill_hits_inner(self, claimed, lane: _Lane) -> None:  # holds: worker
         eng = self.eng
         store = eng._prefix_store(lane.bucket)
         C = eng.ec.prefill_chunk
@@ -420,7 +420,7 @@ class ContinuousScheduler:
                             temp=float(temp[i]), topk=int(topk[i]),
                             seed=int(seed[i]), now=t1)
 
-    def _insert_prefix(self, lane: _Lane, r, matched: int,
+    def _insert_prefix(self, lane: _Lane, r, matched: int,  # holds: worker
                        slot: int) -> None:
         """Insert-on-complete: offer the finished prompt's KV (sitting in
         its lane slot) to the bucket's prefix store. ``matched`` is what
@@ -437,7 +437,7 @@ class ContinuousScheduler:
             stat["prefix_bytes"] = store.bytes_used
 
     # --------------------------------------------------- chunked prefill
-    def _begin_fills(self, claimed, lane: _Lane, entries=None) -> None:
+    def _begin_fills(self, claimed, lane: _Lane, entries=None) -> None:  # holds: worker
         """Reserve a lane slot + a staging slot per long-prompt join; the
         prompt then advances one chunk per scheduler turn in _fill_chunk.
         ``entries[i]`` (when given) is request i's matched ``PrefixEntry``:
@@ -488,7 +488,7 @@ class ContinuousScheduler:
                 if ent is not None:
                     store.release(ent)
 
-    def _release_fills(self, lane: _Lane, fills) -> None:
+    def _release_fills(self, lane: _Lane, fills) -> None:  # holds: worker
         for f in fills:
             if f in lane.fills:
                 lane.fills.remove(f)
@@ -496,7 +496,7 @@ class ContinuousScheduler:
             if lane.staging is not None:
                 lane.staging.release(f.stg)
 
-    def _fill_chunk(self, lane: _Lane) -> None:
+    def _fill_chunk(self, lane: _Lane) -> None:  # holds: worker
         """Advance every in-flight fill of this lane by one prompt chunk
         (one jitted call over the fill batch). Fills whose prompt completes
         are copied staging -> lane slot (one chunk-granular write_back) and
@@ -520,7 +520,7 @@ class ContinuousScheduler:
                 if not f.req.future.done():
                     f.req.future.set_exception(e)
 
-    def _fill_chunk_inner(self, lane: _Lane) -> None:
+    def _fill_chunk_inner(self, lane: _Lane) -> None:  # holds: worker
         eng = self.eng
         C = eng.ec.prefill_chunk
         fills = list(lane.fills)
@@ -575,7 +575,7 @@ class ContinuousScheduler:
                             topk=f.topk, seed=f.seed, now=t1)
 
     # ------------------------------------------------------ decode steps
-    def _segment(self, lane: _Lane) -> None:
+    def _segment(self, lane: _Lane) -> None:  # holds: worker
         """One decode segment for a lane, at the smallest width tier that
         fits its live occupancy (``segment_width='adaptive'``; 'fixed'
         degenerates the ladder to ``max_batch`` and always takes the
@@ -612,7 +612,7 @@ class ContinuousScheduler:
             elif row.req.handle.cancel_requested:
                 self._finish(lane, row, FINISH_CANCELLED, now)
 
-    def _segment_full(self, lane: _Lane):
+    def _segment_full(self, lane: _Lane):  # holds: worker
         """Full-width segment over every pool slot (live rows plus inert
         free/prefilling slots) — today's fixed-width path, and the adaptive
         path's top tier. The pool caches are donated and swapped whole."""
@@ -639,7 +639,7 @@ class ContinuousScheduler:
         return (slots, toks[slots], emits[slots], st_active[slots],
                 st_eos[slots])
 
-    def _segment_compact(self, lane: _Lane, width: int):
+    def _segment_compact(self, lane: _Lane, width: int):  # holds: worker
         """Compacted segment: gather the live rows (and their decode
         state) into a ``width``-row view, decode at that width, scatter
         the live prefix back to the home slots. View rows past the
@@ -677,7 +677,7 @@ class ContinuousScheduler:
         return slots, toks, emits, st_active, st_eos
 
     # ------------------------------------------------------------ retire
-    def _resolve(self, r, toks, reason: str, now: float) -> None:
+    def _resolve(self, r, toks, reason: str, now: float) -> None:  # holds: worker
         eng = self.eng
         timing = RequestTiming(queue_s=r.t_start - r.t_submit,
                                prefill_s=r.t_prefill_done - r.t_start,
@@ -688,14 +688,14 @@ class ContinuousScheduler:
             tokens=np.asarray(toks, np.int32), finish_reason=reason,
             timing=timing, request_id=r.handle.request.request_id))
 
-    def _finish(self, lane: _Lane, row: _Row, reason: str,
+    def _finish(self, lane: _Lane, row: _Row, reason: str,  # holds: worker
                 now: float) -> None:
         del lane.rows[row.slot]
         lane.pool.release(row.slot)
         lane.active[row.slot] = False
         self._resolve(row.req, row.toks, reason, now)
 
-    def _fail_inflight(self, exc: Exception) -> None:
+    def _fail_inflight(self, exc: Exception) -> None:  # holds: worker
         for lane in self.lanes.values():
             for row in list(lane.rows.values()):
                 del lane.rows[row.slot]
@@ -709,7 +709,7 @@ class ContinuousScheduler:
                 if not f.req.future.done():
                     f.req.future.set_exception(exc)
 
-    def _shutdown(self) -> None:
+    def _shutdown(self) -> None:  # holds: worker
         err = RuntimeError("engine is closed")
         self._fail_inflight(err)
         for r in self.pending.drain():

@@ -161,10 +161,10 @@ class ServingEngine:
         tree, final hidden states (B, S, d_model) and the validity mask
         (B, S); returns the per-request payload. Defaults to hidden states
         (encoder) / generated tokens (decoder)."""
-        self.cfg = cfg
-        self.params = params
-        self.ec = engine_cfg
-        self.head_fn = head_fn
+        self.cfg = cfg                    # guarded-by: init
+        self.params = params              # guarded-by: init
+        self.ec = engine_cfg              # guarded-by: init
+        self.head_fn = head_fn            # guarded-by: init
         if engine_cfg.weight_quant not in (None, "int8"):
             raise ValueError(f"weight_quant must be None or 'int8', got "
                              f"{engine_cfg.weight_quant!r}")
@@ -178,28 +178,30 @@ class ServingEngine:
             # prefill/segments — traces against the quantized tree, so the
             # measured windows stay compile-clean with no extra priming
             self.params = quantize_params(self.params)
-        self._weight_bytes = params_bytes(self.params)
-        self._q: "queue.Queue[_Request]" = queue.Queue()
-        self._admission = (AdmissionQueue(engine_cfg.max_inflight)
+        self._weight_bytes = params_bytes(self.params)   # guarded-by: init
+        self._q: "queue.Queue[_Request]" = queue.Queue()  # guarded-by: threadsafe
+        self._admission = (AdmissionQueue(engine_cfg.max_inflight)  # guarded-by: threadsafe
                            if engine_cfg.max_inflight else None)
-        self.latencies: List[float] = []
-        self.batch_sizes: List[int] = []
-        self.timings: List[RequestTiming] = []    # v2 per-phase breakdowns
-        self._stats = {"decode_segments": 0, "joins_mid_flight": 0,
+        self.latencies: List[float] = []          # guarded-by: worker
+        self.batch_sizes: List[int] = []          # guarded-by: worker
+        self.timings: List[RequestTiming] = []    # guarded-by: worker — v2 per-phase breakdowns
+        self._stats = {"decode_segments": 0,      # guarded-by: worker
+                       "joins_mid_flight": 0,
                        "prefill_batches": 0, "prefill_chunks": 0}
-        self.lane_stats = {}              # bucket -> per-lane counters
+        self.lane_stats = {}              # guarded-by: worker — per-lane counters
         # window() cursors: list lengths + counter values at the last snap
-        self._win_cursor = {"latencies": 0, "batch_sizes": 0, "timings": 0,
+        self._win_cursor = {"latencies": 0,       # guarded-by: client
+                            "batch_sizes": 0, "timings": 0,
                             "stats": dict(self._stats), "lanes": {}}
-        self._stop = threading.Event()
+        self._stop = threading.Event()            # guarded-by: threadsafe
         # reentrant: a done-callback attached under the lock can fire
         # synchronously (future cancelled in the attach window) and re-enter
-        self._submit_lock = threading.RLock()  # orders submit vs close
-        self._overflow = RequestQueue()        # admission overflow (priority)
-        self._parked_cancelled = 0             # phantoms still in the heap
-        self._compiled = {}
-        self._pools = {}                  # bucket -> CachePool
-        self.continuous_active = (
+        self._submit_lock = threading.RLock()  # guarded-by: threadsafe — orders submit vs close
+        self._overflow = RequestQueue()        # guarded-by: _submit_lock — admission overflow
+        self._parked_cancelled = 0             # guarded-by: _submit_lock — phantoms in heap
+        self._compiled = {}               # guarded-by: worker
+        self._pools = {}                  # guarded-by: worker — bucket -> CachePool
+        self.continuous_active = (        # guarded-by: init
             engine_cfg.mode == "decoder" and engine_cfg.continuous
             and engine_cfg.use_scan_decode and engine_cfg.use_cache_pool)
         if engine_cfg.segment_width not in ("adaptive", "fixed"):
@@ -208,7 +210,7 @@ class ServingEngine:
                 f"{engine_cfg.segment_width!r}")
         # the width ladder compacted segments may run at (see scheduler.
         # width_tiers); 'fixed' degenerates to the max_batch-only ladder
-        self._tiers = (width_tiers(engine_cfg.max_batch)
+        self._tiers = (width_tiers(engine_cfg.max_batch)  # guarded-by: init
                        if engine_cfg.segment_width == "adaptive"
                        else (engine_cfg.max_batch,))
         C = engine_cfg.prefill_chunk
@@ -227,7 +229,7 @@ class ServingEngine:
                         f"slot's {b + engine_cfg.max_new_tokens}; pick a "
                         f"chunk dividing the bucket or raise "
                         f"max_new_tokens")
-        self._prefix_stores = {}          # bucket -> PrefixStore
+        self._prefix_stores = {}          # guarded-by: worker — bucket -> PrefixStore
         if engine_cfg.prefix_cache:
             if not self.continuous_active:
                 raise ValueError(
@@ -250,11 +252,11 @@ class ServingEngine:
                 self._lane_stat(b)   # fixed key set: metrics() iterates
                                      # lane_stats without a lock
             from repro.serving.continuous import ContinuousScheduler
-            self._scheduler = ContinuousScheduler(self)
+            self._scheduler = ContinuousScheduler(self)  # guarded-by: init
             target = self._scheduler.run
         else:
             target = self._run
-        self._worker = threading.Thread(target=target, daemon=True)
+        self._worker = threading.Thread(target=target, daemon=True)  # guarded-by: init
         self._worker.start()
 
     # ------------------------------------------------------------- client
@@ -372,7 +374,7 @@ class ServingEngine:
                 return
             self._q.put(req)
 
-    def _enqueue_admitted(self, req: _Request) -> None:
+    def _enqueue_admitted(self, req: _Request) -> None:  # holds: _submit_lock
         """Put an admitted request on the worker queue; its slot is held
         until the future resolves, then handed to the next parked request.
         Caller holds _submit_lock. If the future is already done (a cancel
@@ -386,7 +388,7 @@ class ServingEngine:
             with self._submit_lock:
                 self._parked_cancelled += 1
 
-    def _drop_parked(self, r) -> bool:
+    def _drop_parked(self, r) -> bool:  # holds: _submit_lock
         """Pop predicate: discard done (cancelled-while-parked) entries,
         reconciling the phantom counter as they physically leave the heap.
         Caller holds _submit_lock; pop discards a matched entry exactly
@@ -614,7 +616,7 @@ class ServingEngine:
             f"({self.ec.pad_buckets[-1]}); split the request or configure "
             f"larger pad_buckets")
 
-    def _encoder_fn(self, bucket: int):
+    def _encoder_fn(self, bucket: int):  # holds: worker
         if ("enc", bucket) not in self._compiled:
             def fn(params, tokens, mask):
                 pos = jnp.broadcast_to(
@@ -632,7 +634,7 @@ class ServingEngine:
         return self._compiled[("enc", bucket)]
 
     # --------------------------------------------------- decoder hot path
-    def _sampling_arrays(self, reqs: List[_Request]):
+    def _sampling_arrays(self, reqs: List[_Request]):  # holds: worker
         """Per-row sampling/stop arrays from a request batch; legacy
         requests (no SamplingParams) default to greedy full-budget rows."""
         T = self.ec.max_new_tokens
@@ -657,7 +659,7 @@ class ServingEngine:
                 seed[i] = sp.seed
         return temp, topk, seed, eos, budget, any_sample
 
-    def _decode_scan_fn(self):
+    def _decode_scan_fn(self):  # holds: worker
         """One fused jitted function: prefill -> per-row last-position
         first-token selection -> ``decode_segment`` over the remaining
         steps. jit specializes it per (batch, bucket) shape — and per
@@ -685,7 +687,7 @@ class ServingEngine:
             self._compiled["dec_scan"] = jax.jit(fn)
         return self._compiled["dec_scan"]
 
-    def _decode_fns(self):
+    def _decode_fns(self):  # holds: worker
         """Legacy per-token path (kept for A/B benchmarks + equivalence
         tests; ``use_scan_decode=False`` selects it; greedy only).
         unroll_periods=False reproduces the seed's scanned-period step
@@ -699,7 +701,7 @@ class ServingEngine:
             )
         return self._compiled["dec"]
 
-    def _prefill_fn(self):
+    def _prefill_fn(self):  # holds: worker
         """Continuous-batching prefill-into-slot: fill the rows' pool-slot
         caches and select each row's first token. jit specializes per
         (n_new, bucket) shape."""
@@ -715,7 +717,7 @@ class ServingEngine:
             self._compiled["cont_prefill"] = jax.jit(fn)
         return self._compiled["cont_prefill"]
 
-    def _chunk_fn(self):
+    def _chunk_fn(self):  # holds: worker
         """Chunked-prefill step: run one prompt chunk against the rows'
         staged caches (``models.prefill_chunk``) and select each row's
         next-token candidate at its last valid chunk position — only
@@ -740,7 +742,7 @@ class ServingEngine:
             self._compiled["cont_chunk"] = jax.jit(fn)
         return self._compiled["cont_chunk"]
 
-    def _segment_fn(self):
+    def _segment_fn(self):  # holds: worker
         """One jitted decode segment over the full slot batch (the
         continuous scheduler's step core). The pool caches are donated:
         the segment updates them in place and the scheduler swaps in the
@@ -759,7 +761,7 @@ class ServingEngine:
             self._compiled["cont_segment"] = jax.jit(fn, donate_argnums=3)
         return self._compiled["cont_segment"]
 
-    def _get_pool(self, bucket: int) -> CachePool:
+    def _get_pool(self, bucket: int) -> CachePool:  # holds: worker
         pool = self._pools.get(bucket)
         if pool is None:
             pool = CachePool(self.cfg, self.ec.max_batch,
@@ -772,7 +774,7 @@ class ServingEngine:
                     sum(x.nbytes for x in jax.tree.leaves(pool.caches)))
         return pool
 
-    def _prefix_store(self, bucket: int):
+    def _prefix_store(self, bucket: int):  # holds: worker
         """The bucket's prefix store, or None when the prefix cache is off
         or the bucket cannot hold a full chunk-aligned prefix (a stored
         prefix is strictly shorter than the prompt, so buckets <= chunk
@@ -793,7 +795,7 @@ class ServingEngine:
             self._prefix_stores[bucket] = store
         return store
 
-    def _acquire_caches(self, B: int, bucket: int):
+    def _acquire_caches(self, B: int, bucket: int):  # holds: worker
         """Batch-sized decode caches: pooled slots (reset-on-assign, no
         per-batch allocation sweep) or a fresh make_caches tree."""
         if not self.ec.use_cache_pool:
@@ -810,7 +812,7 @@ class ServingEngine:
             pool, slots = handle
             pool.release_many(slots)
 
-    def _serve_decoder(self, toks, lens, bucket, reqs):
+    def _serve_decoder(self, toks, lens, bucket, reqs):  # holds: worker
         """Batch-at-a-time decode. Returns (gen (B, T), emits (B, T) bool,
         eos_hit (B,) bool) — emits marks each row's kept prefix (its budget
         / first-eos trim)."""
@@ -851,7 +853,7 @@ class ServingEngine:
         finally:
             self._release_caches(handle)
 
-    def _serve_batch(self, reqs: List[_Request]):
+    def _serve_batch(self, reqs: List[_Request]):  # holds: worker
         # claim each future (concurrent.futures protocol): a client-side
         # cancel() that won between enqueue and here drops the request
         # instead of poisoning set_result for the whole batch
@@ -904,13 +906,13 @@ class ServingEngine:
                     tokens=row, finish_reason=reason, timing=timings[i],
                     request_id=r.handle.request.request_id))
 
-    def _record_batch(self, reqs: List[_Request]) -> None:
+    def _record_batch(self, reqs: List[_Request]) -> None:  # holds: worker
         now = time.perf_counter()
         self.batch_sizes.append(len(reqs))
         for r in reqs:
             self.latencies.append(now - r.t_submit)
 
-    def _run(self):
+    def _run(self):  # holds: worker
         while not self._stop.is_set():
             try:
                 first = self._q.get(timeout=0.05)
@@ -934,7 +936,7 @@ class ServingEngine:
                         r.future.set_exception(e)
 
     # ------------------------------------------------------------ metrics
-    def _lane_stat(self, bucket: int) -> dict:
+    def _lane_stat(self, bucket: int) -> dict:  # holds: worker
         """Per-lane counters (scheduler-side accumulation point)."""
         stat = self.lane_stats.get(bucket)
         if stat is None:
@@ -1051,8 +1053,9 @@ class ServingEngine:
             m["lanes"] = self._lane_view(self.lane_stats)
             m["jit_compiles"] = self._jit_compiles()
         if self._admission is not None:
-            m["admission_peak_queue"] = self._admission.stats.queued_peak
-            m["admission_wait_total_s"] = self._admission.stats.wait_total_s
+            adm = self._admission.snapshot()   # consistent read under _lock
+            m["admission_peak_queue"] = adm.queued_peak
+            m["admission_wait_total_s"] = adm.wait_total_s
         return m
 
     def window(self) -> dict:

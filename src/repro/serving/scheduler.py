@@ -15,7 +15,7 @@ import heapq
 import itertools
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Sequence, Tuple
 
 
@@ -53,8 +53,8 @@ class RequestQueue:
     submit lock (overflow) or own the worker thread (pending)."""
 
     def __init__(self):
-        self._heap: list = []
-        self._seq = itertools.count()
+        self._heap: list = []            # guarded-by: external
+        self._seq = itertools.count()    # guarded-by: external
 
     def push(self, item, priority: int = 0) -> None:
         heapq.heappush(self._heap, (-priority, next(self._seq), item))
@@ -113,8 +113,8 @@ class LaneQueue:
     thread-safe — owned by the scheduler worker thread."""
 
     def __init__(self):
-        self._lanes: dict = {}           # lane key -> RequestQueue
-        self._seq = itertools.count()    # shared: cross-lane FIFO ordering
+        self._lanes: dict = {}           # guarded-by: external — lane -> RequestQueue
+        self._seq = itertools.count()    # guarded-by: external — cross-lane FIFO
 
     def push(self, item, priority: int = 0, *, lane) -> None:
         q = self._lanes.get(lane)
@@ -166,11 +166,11 @@ class AdmissionStats:
 
 class AdmissionQueue:
     def __init__(self, max_inflight: int):
-        self.max_inflight = max_inflight
-        self._sem = threading.Semaphore(max_inflight)
-        self._lock = threading.Lock()
-        self._waiting = 0
-        self.stats = AdmissionStats()
+        self.max_inflight = max_inflight  # guarded-by: init
+        self._sem = threading.Semaphore(max_inflight)  # guarded-by: threadsafe
+        self._lock = threading.Lock()     # guarded-by: threadsafe
+        self._waiting = 0                 # guarded-by: _lock
+        self.stats = AdmissionStats()     # guarded-by: _lock
 
     def acquire(self) -> None:
         """Block until an in-flight slot is free (FIFO-ish via semaphore)."""
@@ -206,6 +206,12 @@ class AdmissionQueue:
         with self._lock:
             self.stats.admitted += 1
             self.stats.wait_total_s += waited_s
+
+    def snapshot(self) -> AdmissionStats:
+        """Consistent copy of the admission counters — the lock-safe way
+        for ``engine.metrics()`` (a client thread) to read them."""
+        with self._lock:
+            return replace(self.stats)
 
     def release(self) -> None:
         self._sem.release()

@@ -1,0 +1,55 @@
+"""Known-bad donation fixture — parsed by the lint tests, never imported.
+
+Lines carrying ``EXPECT: donation`` must be flagged by the donation
+pass (and nothing else in this file may be).
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def reset(caches, val):
+    return caches.at[:].set(val)
+
+
+step = jax.jit(lambda c, x: c + x, donate_argnums=0)
+
+
+def read_after_donate(caches):
+    out = reset(caches, 0)
+    total = caches.sum()                        # EXPECT: donation
+    return out, total
+
+
+def rebind_then_reuse(c):
+    c = step(c, 1)                  # clean: rebound in the same statement
+    ok = c.sum()
+    out = step(c, 2)
+    return out, c.mean()                        # EXPECT: donation
+
+
+def loop_back_edge(pool):
+    for _ in range(3):
+        view = reset(pool.caches, 1)            # EXPECT: donation
+    return view
+
+
+def branch_survives(caches, flag):
+    out = reset(caches, 0)
+    if flag:
+        caches = out                # killed on this path only
+    return caches + 1                           # EXPECT: donation
+
+
+class Pool:
+    def _seg(self):
+        if "seg" not in self.compiled:
+            self.compiled["seg"] = jax.jit(lambda c: c * 2,
+                                           donate_argnums=0)
+        return self.compiled["seg"]
+
+    def factory_misuse(self):
+        out = self._seg()(self.caches)
+        stale = self.caches + 1                 # EXPECT: donation
+        return out, stale

@@ -1,0 +1,56 @@
+"""Known-good donation fixture — every idiom here must stay clean.
+
+These mirror the real call sites in serving/kvcache.py and
+serving/continuous.py: donate-and-rebind in one statement, donate into
+a different binding then never touch the old one, kill-on-store before
+the next read, and reads of *other* attributes of the donated object's
+owner.
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def reset(caches, val):
+    return caches.at[:].set(val)
+
+
+step = jax.jit(lambda c, x: c + x, donate_argnums=0)
+
+plain = jax.jit(lambda c, x: c + x)     # no donation: free to reuse args
+
+
+def rebind_same_statement(pool, val):
+    pool.caches = reset(pool.caches, val)     # the kvcache.py idiom
+    return pool.caches.sum()
+
+
+def store_kills_taint(caches):
+    out = reset(caches, 0)
+    caches = out                    # explicit rebind before any read
+    return caches + 1
+
+
+def donate_and_drop(pool):
+    view = reset(pool.caches, 0)
+    pool.caches = view              # scatter-back: prefix store kills all
+    return pool.caches
+
+
+def sibling_fields_stay_free(pool):
+    out = reset(pool.caches, 0)
+    n = pool.nslots                 # not under the donated path
+    pool.caches = out
+    return n
+
+
+def loop_rebinds_every_iteration(pool):
+    for i in range(3):
+        pool.caches = reset(pool.caches, i)   # warmup-loop idiom
+    return pool.caches
+
+
+def non_donating_jit_is_free(caches):
+    out = plain(caches, 1)
+    return out + caches             # fine: nothing was donated

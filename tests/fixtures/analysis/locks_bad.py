@@ -1,0 +1,44 @@
+"""Known-bad lock-discipline fixture — parsed only, never imported.
+
+Each ``EXPECT: locks`` line touches an annotated field outside its
+declared guard.
+"""
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()   # guarded-by: threadsafe
+        self._overflow = []             # guarded-by: _lock
+        self.stats = {}                 # guarded-by: worker
+        self.limit = 8                  # guarded-by: init
+
+    def submit(self, item):
+        self._overflow.append(item)                 # EXPECT: locks
+        with self._lock:
+            self._overflow.append(item)   # clean: lock held
+
+    def helper_without_marker(self):
+        return len(self._overflow)                  # EXPECT: locks
+
+    def bump_stats(self):       # carries no worker-ownership marker
+        self.stats["n"] = 1                         # EXPECT: locks
+
+    def reconfigure(self):
+        self.limit = 16                             # EXPECT: locks
+
+    def closure_escapes_lock(self):
+        with self._lock:
+            def later():
+                self._overflow.clear()              # EXPECT: locks
+            return later
+
+
+class InternalQueue:
+    def __init__(self):
+        self._heap = []                 # guarded-by: external
+
+
+class Meddler:
+    def poke(self, q: InternalQueue):
+        q._heap.append(1)                           # EXPECT: locks

@@ -1,0 +1,49 @@
+"""Known-good lock-discipline fixture — every guarded access pattern
+the serving modules use; all must stay clean."""
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()   # guarded-by: threadsafe
+        self._overflow = []             # guarded-by: _lock
+        self.stats = {}                 # guarded-by: worker
+        self.limit = 8                  # guarded-by: init
+        self.cursor = 0                 # guarded-by: client
+        self._q = object()              # guarded-by: threadsafe
+        self._overflow.append(None)     # clean: declaring __init__
+
+    def submit(self, item):
+        with self._lock:
+            self._overflow.append(item)
+
+    def _drop(self, item):  # holds: _lock
+        """Caller holds _lock."""
+        self._overflow.remove(item)
+
+    def _run(self):  # holds: worker
+        self.stats["segments"] = self.stats.get("segments", 0) + 1
+        self._drain()
+
+    def _drain(self):  # holds: worker
+        with self._lock:
+            while self._overflow:       # both guards held
+                self.stats["n"] = len(self._overflow)
+                self._overflow.pop()
+
+    def read_init_field(self):
+        return self.limit               # init fields are free to read
+
+    def client_side(self):
+        self.cursor += 1                # client-owned: unenforced
+        return self._q                  # threadsafe: free
+
+
+class InternalQueue:
+    def __init__(self):
+        self._heap = []                 # guarded-by: external
+        self._seq = 0                   # guarded-by: external
+
+    def push(self, item, other):
+        self._heap.append(item)         # declaring class: allowed
+        other._seq = self._seq          # peer instance, same class: allowed

@@ -1,0 +1,47 @@
+"""Known-bad recompile-hazard fixture — parsed only, never imported.
+
+``predict`` reproduces the pre-fix core/gector.py:75 bug verbatim
+shape-wise: jit built inline at the call site, fresh compile cache per
+call. Each ``EXPECT: recompile`` line defeats the jit cache (or will
+raise on first call).
+"""
+import jax
+
+counter = 0
+
+
+def forward(cfg, params, tokens):
+    return tokens
+
+
+def predict(cfg, params, toks):
+    return jax.jit(forward, static_argnums=0)(cfg, params, toks)  # EXPECT: recompile
+
+
+def jit_in_loop(params, batches):
+    outs = []
+    for b in batches:
+        f = jax.jit(forward)                        # EXPECT: recompile
+        outs.append(f(None, params, b))
+    return outs
+
+
+bad_index = jax.jit(forward, static_argnums=5)      # EXPECT: recompile
+
+bad_name = jax.jit(forward, static_argnames=("nope",))  # EXPECT: recompile
+
+g = jax.jit(forward, static_argnums=0)
+
+
+def unhashable_static(params, toks):
+    return g([1, 2], params, toks)                  # EXPECT: recompile
+
+
+@jax.jit
+def closes_over_mutable(x):
+    return x + counter                              # EXPECT: recompile
+
+
+def bump():
+    global counter
+    counter += 1

@@ -1,0 +1,49 @@
+"""Known-good recompile fixture — the sanctioned jit idioms; all must
+stay clean."""
+import functools
+
+import jax
+
+EPS = 1e-6          # constant module global: free to close over
+
+
+def forward(cfg, params, tokens):
+    return tokens
+
+
+#: module-level binding — one wrapper, one persistent compile cache
+#: (the post-fix core/gector.py shape)
+jit_forward = jax.jit(forward, static_argnums=0)
+
+
+def predict(cfg, params, toks):
+    return jit_forward(cfg, params, toks)
+
+
+def hoisted_above_loop(params, batches):
+    f = jax.jit(forward)            # built once, reused every iteration
+    return [f(None, params, b) for b in batches]
+
+
+def aot_lower(cfg, params, toks):
+    # jit(...).lower(...) is the deliberate AOT idiom (launch/dryrun.py):
+    # the wrapper is intentionally single-use, compilation is the point
+    return jax.jit(forward, static_argnums=0).lower(cfg, params, toks)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def uses_constant_global(x, scale=1.0):
+    return x * scale + EPS          # EPS is never rebound: safe to bake
+
+
+def hashable_static(params, toks):
+    return jit_forward((1, 2), params, toks)    # tuple: hashable, cached
+
+
+class Engine:
+    def _segment_fn(self):
+        # the engine's cached-factory idiom: built once per key, stored,
+        # reused — the jit is not in a loop and not inline at a call site
+        if "seg" not in self._compiled:
+            self._compiled["seg"] = jax.jit(forward, static_argnums=0)
+        return self._compiled["seg"]

@@ -1,0 +1,56 @@
+"""Known-bad trace-safety fixture — parsed only, never imported.
+
+Each ``EXPECT: trace`` line is a host sync or Python control flow on
+a traced value inside a directly-jitted function.
+"""
+import functools
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def pulls_item(x):
+    v = x.sum().item()                          # EXPECT: trace
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def branches_on_traced(x, flag):
+    if flag:                        # clean: static parameter
+        x = x + 1
+    if x.sum() > 0:                             # EXPECT: trace
+        x = x - 1
+    return x
+
+
+@jax.jit
+def loops_on_traced(x):
+    while x > 0:                                # EXPECT: trace
+        x = x - 1
+    return x
+
+
+@jax.jit
+def host_round_trip(x):
+    y = np.asarray(x)                           # EXPECT: trace
+    t = time.time()                             # EXPECT: trace
+    return y, t
+
+
+def converts_traced(x, n):
+    scale = float(x)                            # EXPECT: trace
+    return scale * n
+
+
+jitted_by_reference = jax.jit(converts_traced, static_argnames=("n",))
+
+
+@jax.jit
+def taint_flows_through_assignment(x):
+    y = x * 2
+    z = y + 1
+    if z:                                       # EXPECT: trace
+        z = z + 1
+    return z

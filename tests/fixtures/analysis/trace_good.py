@@ -1,0 +1,50 @@
+"""Known-good trace-safety fixture — trace-time-static idioms that the
+kernel wrappers rely on; all must stay clean."""
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("k",))
+def static_branches(cfg, x, k=4):
+    if cfg:                         # static_argnums param
+        x = x + 1
+    if k > 2:                       # static_argnames param
+        x = x * 2
+    return x
+
+
+@jax.jit
+def shape_reads_are_static(x):
+    B = x.shape[0]
+    if B > 1:                       # shape-derived: resolved at trace time
+        x = x.reshape(B, -1)
+    n = int(x.ndim)                 # int() of a static attribute
+    if len(x) > 2:                  # len() is the static leading dim
+        x = x[:2]
+    return x, n
+
+
+@jax.jit
+def is_none_dispatch(x, mask=None):
+    if mask is None:                # identity check: no concretization
+        return x
+    return jnp.where(mask, x, 0)
+
+
+def host_side_is_free(x):
+    t = time.time()                 # not jitted: host calls are fine
+    arr = np.asarray(x)
+    return arr.sum().item(), t
+
+
+@jax.jit
+def overwrite_clears_taint(x):
+    n = x + 1
+    n = 3                           # rebound to a static value
+    if n > 2:                       # no longer traced
+        x = x * n
+    return x

@@ -1,0 +1,136 @@
+"""repro-lint analyzer tests.
+
+Three layers, per the fixture convention in docs/ANALYSIS.md:
+
+* each pass over its known-bad fixture flags exactly the lines carrying
+  ``# EXPECT: <pass>`` (no misses, no extras);
+* each pass over its known-good fixture — the sanctioned repo idioms —
+  stays silent;
+* a meta-test mirrors ``tools/lint.py --strict`` over ``src/`` (same
+  passes, same baseline, same hygiene rules), so tier-1 itself fails on
+  a new real finding, a stale suppression, or an unjustified one.
+
+Fixtures are parsed, never imported — the analyzer itself imports no
+jax, so this whole file runs without an accelerator stack.
+"""
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, PASSES, load_modules, run_passes)
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+BASELINE = REPO / "tools" / "lint_baseline.txt"
+
+_EXPECT = re.compile(r"#\s*EXPECT:\s*([A-Za-z_][\w]*)")
+
+
+def expected_lines(path: Path):
+    """pass_id -> set of 1-based line numbers carrying its EXPECT tag."""
+    out = {}
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = _EXPECT.search(line)
+        if m:
+            out.setdefault(m.group(1), set()).add(i)
+    return out
+
+
+def run_one(pass_id: str, fixture: Path):
+    mods = load_modules(REPO, [fixture])
+    return run_passes(mods, select=[pass_id])
+
+
+@pytest.mark.parametrize("pass_id", sorted(PASSES))
+def test_fixtures_exist(pass_id):
+    assert (FIXTURES / f"{pass_id}_bad.py").exists()
+    assert (FIXTURES / f"{pass_id}_good.py").exists()
+
+
+@pytest.mark.parametrize("pass_id", sorted(PASSES))
+def test_known_bad_flags_expected_lines(pass_id):
+    fixture = FIXTURES / f"{pass_id}_bad.py"
+    want = expected_lines(fixture).get(pass_id, set())
+    assert want, f"{fixture.name} carries no EXPECT: {pass_id} markers"
+    findings = run_one(pass_id, fixture)
+    got = {f.line for f in findings}
+    assert got == want, (
+        f"{pass_id} over {fixture.name}: flagged {sorted(got)}, "
+        f"expected {sorted(want)}\n"
+        + "\n".join(f.render() for f in findings))
+
+
+@pytest.mark.parametrize("pass_id", sorted(PASSES))
+def test_known_good_is_clean(pass_id):
+    fixture = FIXTURES / f"{pass_id}_good.py"
+    findings = run_one(pass_id, fixture)
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+def test_findings_carry_location_and_hint():
+    findings = run_one("recompile", FIXTURES / "recompile_bad.py")
+    assert findings
+    for f in findings:
+        assert f.path.endswith("recompile_bad.py")
+        assert f.line > 0 and f.qualname and f.message
+        assert f.hint, "every finding ships a fix-hint"
+        rendered = f.render()
+        assert f"{f.path}:{f.line}:" in rendered and "[recompile]" in rendered
+
+
+# ------------------------------------------------------------- baseline
+def test_baseline_suppresses_and_tracks_stale(tmp_path):
+    bl_file = tmp_path / "baseline.txt"
+    bl_file.write_text(
+        "recompile | */recompile_bad.py | predict | * | fixture demo\n"
+        "recompile | */recompile_bad.py | no_such_scope | * | stale entry\n")
+    bl = Baseline.load(bl_file)
+    assert not bl.errors
+    findings = run_one("recompile", FIXTURES / "recompile_bad.py")
+    kept = bl.filter(findings)
+    assert len(kept) == len(findings) - 1      # exactly predict suppressed
+    assert all(f.qualname != "predict" for f in kept)
+    stale = bl.unused()
+    assert len(stale) == 1 and stale[0].scope == "no_such_scope"
+
+
+def test_baseline_rejects_missing_justification(tmp_path):
+    bl_file = tmp_path / "baseline.txt"
+    bl_file.write_text("locks | src/x.py | * | * |\n"
+                       "locks | too | few | fields\n")
+    bl = Baseline.load(bl_file)
+    assert len(bl.errors) == 2
+
+
+# ---------------------------------------------------- src/ stays clean
+def test_src_is_finding_free_under_strict():
+    """The exact --strict contract, in-process: no unsuppressed findings
+    on src/, no baseline format errors, no stale entries."""
+    findings = run_passes(load_modules(REPO))
+    baseline = Baseline.load(BASELINE)
+    assert not baseline.errors, "\n".join(baseline.errors)
+    kept = baseline.filter(findings)
+    assert not kept, "\n".join(f.render() for f in kept)
+    stale = baseline.unused()
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_lint_cli_strict_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint.py"), "--strict"],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_gector_inline_jit_stays_fixed():
+    """The PR-8 motivating finding: core/gector.py must keep its jit at
+    module level (the recompile pass would flag an inline regression)."""
+    gector = REPO / "src" / "repro" / "core" / "gector.py"
+    findings = run_one("recompile", gector)
+    assert not findings, "\n".join(f.render() for f in findings)
+    assert "_jit_gector_forward = jax.jit(gector_forward" \
+        in gector.read_text()

@@ -1,12 +1,14 @@
 """Docs drift guard (CI `docs` job; also run by tests/test_docs.py).
 
-Two cheap checks that keep the docs from rotting as the code moves:
+Three cheap checks that keep the docs from rotting as the code moves:
 
   1. every relative markdown link in README.md, ROADMAP.md and docs/*.md
      points at a path that exists in the repo;
   2. every ``EngineConfig`` field name appears in docs/TUNING.md (the
      knob-by-knob tuning guide must cover new knobs the moment they are
-     added).
+     added);
+  3. every registered repro-lint pass is documented in docs/ANALYSIS.md
+     (pass names are read from ``repro.analysis`` — itself jax-free).
 
 Pure stdlib (the EngineConfig fields are read via ``ast``, not import),
 so the CI job needs no jax. Exit code 0 = clean; 1 = drift, with one
@@ -24,6 +26,7 @@ from pathlib import Path
 DOC_FILES = ("README.md", "ROADMAP.md")   # + every docs/*.md
 ENGINE_PY = Path("src/repro/serving/engine.py")
 TUNING_MD = Path("docs/TUNING.md")
+ANALYSIS_MD = Path("docs/ANALYSIS.md")
 
 # [text](target) — markdown links, excluding images; target split at '#'
 _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
@@ -71,16 +74,40 @@ def check_tuning_covers_config(root: Path) -> list:
             if not re.search(rf"`{re.escape(name)}`", tuning)]
 
 
+def lint_pass_names(root: Path) -> list:
+    """Registered repro-lint pass names, via the analysis registry
+    (pure stdlib — importing repro.analysis pulls in no jax)."""
+    src = str(root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.analysis import PASSES
+    return sorted(PASSES)
+
+
+def check_analysis_docs(root: Path) -> list:
+    """docs/ANALYSIS.md must document every registered pass by name."""
+    md = root / ANALYSIS_MD
+    if not md.exists():
+        return [f"{ANALYSIS_MD}: missing (the repro-lint pass catalog)"]
+    text = md.read_text()
+    return [f"{ANALYSIS_MD}: lint pass {name!r} is undocumented"
+            for name in lint_pass_names(root)
+            if not re.search(rf"`{re.escape(name)}`", text)]
+
+
 def main(argv=None) -> int:
     root = Path((argv or sys.argv[1:] or ["."])[0]).resolve()
-    problems = check_links(root) + check_tuning_covers_config(root)
+    problems = (check_links(root) + check_tuning_covers_config(root)
+                + check_analysis_docs(root))
     for p in problems:
         print(f"docs-drift: {p}")
     if not problems:
         n_docs = len(list(doc_paths(root)))
         n_fields = len(engine_config_fields(root))
+        n_passes = len(lint_pass_names(root))
         print(f"docs clean: {n_docs} files link-checked, "
-              f"{n_fields} EngineConfig fields covered by {TUNING_MD}")
+              f"{n_fields} EngineConfig fields covered by {TUNING_MD}, "
+              f"{n_passes} lint passes covered by {ANALYSIS_MD}")
     return 1 if problems else 0
 
 

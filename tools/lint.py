@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""repro-lint: run the JAX-aware static-analysis passes over src/.
+
+    PYTHONPATH=src python tools/lint.py [root] [--strict] \
+        [--select PASS[,PASS]] [--baseline FILE] [--list-passes]
+
+Pure stdlib + ``repro.analysis`` (which imports no jax): CI runs this
+without an accelerator stack. Exit status is 0 when no unsuppressed
+findings remain; ``--strict`` additionally fails on baseline-hygiene
+problems — malformed or justification-less entries, and entries that no
+longer suppress anything (stale once the code is fixed).
+
+See docs/ANALYSIS.md for the pass catalog, the ``# guarded-by:`` /
+``# holds:`` annotation syntax, and the baseline workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis import (Baseline, PASSES, load_modules,  # noqa: E402
+                            run_passes)
+
+DEFAULT_BASELINE = _REPO / "tools" / "lint_baseline.txt"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("root", nargs="?", default=str(_REPO),
+                    help="repo root to lint (default: this repo); "
+                         "src/ under it is analysed")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on baseline-hygiene problems "
+                         "(malformed/unjustified/stale entries)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="PASS[,PASS]",
+                    help="run only these passes (repeatable)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    metavar="FILE",
+                    help="suppression file (default: tools/"
+                         "lint_baseline.txt); 'none' disables")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list registered passes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for name in sorted(PASSES):
+            print(f"{name:12s} {PASSES[name].description}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [p for chunk in args.select for p in chunk.split(",") if p]
+
+    modules = load_modules(Path(args.root))
+    try:
+        findings = run_passes(modules, select=select)
+    except ValueError as e:          # unknown --select name
+        ap.error(str(e))
+
+    baseline = Baseline() if args.baseline == "none" \
+        else Baseline.load(Path(args.baseline))
+    kept = baseline.filter(findings)
+
+    for f in kept:
+        print(f.render())
+
+    failures = len(kept)
+    suppressed = len(findings) - len(kept)
+    if args.strict:
+        for err in baseline.errors:
+            print(f"baseline error: {err}")
+            failures += 1
+        for e in baseline.unused():
+            print(f"baseline stale: {args.baseline}:{e.lineno}: entry "
+                  f"`{e.pass_id} | {e.path} | {e.scope} | {e.detail}` "
+                  f"suppressed nothing — remove it")
+            failures += 1
+
+    ran = ", ".join(select) if select else "all passes"
+    print(f"repro-lint: {len(modules)} modules, {ran}: "
+          f"{len(kept)} finding(s), {suppressed} suppressed"
+          + (f", {failures - len(kept)} baseline problem(s)"
+             if args.strict and failures > len(kept) else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
