@@ -221,7 +221,11 @@ def _engine_summary(engine) -> dict:
             # weight bytes, so quant A/B grid cells are self-describing
             "weight_quant": ec.weight_quant,
             "kv_quant": ec.kv_quant,
-            "weight_bytes": int(getattr(engine, "_weight_bytes", 0))}
+            "weight_bytes": int(getattr(engine, "_weight_bytes", 0)),
+            # draft-and-verify knobs, so spec A/B grid cells are
+            # self-describing too
+            "spec_decode": bool(ec.spec_decode),
+            "spec_k": ec.spec_k}
 
 
 def write_jsonl(records: Iterable[ExperimentRecord], path: str) -> None:

@@ -50,6 +50,20 @@ def make_engine_factory(args):
         arch = args.arch if decoder else "gector-base"
         cfg = get_config(arch, smoke=args.smoke)
         params = init_params(cfg, jax.random.PRNGKey(0))
+        sd = scenario.name.endswith("_sd")
+        draft = None
+        if sd:
+            # self-drafting: the draft is the target's own first layer
+            # (plus the shared embeddings/head) — no second checkpoint to
+            # ship, and the layer keeps the target's vocab and widths, so
+            # the pair prices speculation as a pure engine knob
+            import dataclasses
+            dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-draft",
+                                       n_layers=len(cfg.pattern))
+            dparams = dict(params)
+            dparams["blocks"] = jax.tree.map(lambda x: x[:1],
+                                             params["blocks"])
+            draft = (dcfg, dparams)
         # decoder scenarios serve the mixed-length traffic the paper's
         # corpus actually has: prompts alternating two pad buckets through
         # the multi-lane scheduler, long prompts prefilling in chunks,
@@ -66,7 +80,8 @@ def make_engine_factory(args):
             prefill_chunk=max(args.bucket // 4, 8) if decoder else None,
             segment_width=args.segment_width,
             prefix_cache=scenario.name.endswith("_pc"),
-            weight_quant=quant, kv_quant=quant))
+            weight_quant=quant, kv_quant=quant,
+            spec_decode=sd, spec_k=args.spec_k), draft=draft)
         if shared:
             # the prefix-cache A/B cell: every request re-sends the same
             # long system prompt plus a short unique suffix — the traffic
@@ -124,6 +139,18 @@ def build_scenarios(args) -> list:
         # default — the grid cell pricing the paper's cache-dominance
         # finding (footprint, not FLOPs, decides the cheapest profile)
         for name in ("staggered_quant", "staggered_quant_q8"):
+            scenarios.append(WorkloadScenario(
+                name=name, kind=KIND_STAGGERED, mode="decoder",
+                n_requests=args.requests, gap_s=args.gap,
+                max_new_tokens=args.max_new_tokens))
+    if args.spec_decode:
+        # speculative-decoding A/B pair at equal offered load: same
+        # mixed-bucket traffic, draft-and-verify rounds (self-drafted
+        # from the target's first layer) vs plain decode segments — the
+        # grid cell pricing what speculation is worth per machine, with
+        # the measured accept rate alongside (the knob's value is
+        # workload-dependent, so the cell must carry it)
+        for name in ("staggered_spec", "staggered_spec_sd"):
             scenarios.append(WorkloadScenario(
                 name=name, kind=KIND_STAGGERED, mode="decoder",
                 n_requests=args.requests, gap_s=args.gap,
@@ -216,6 +243,51 @@ def quant_cells(records) -> list:
     return out
 
 
+def spec_decode_cells(records) -> list:
+    """$/1M-requests and accept rate for the staggered_spec A/B pair, per
+    profile — the deploy-lab cell pricing speculative decoding at equal
+    offered load. The accept rate comes from the record's engine window
+    (per-lane spec_proposed/spec_accepted counters): a cell's cost delta
+    only transfers to workloads with a comparable accept rate, so the
+    ledger carries both."""
+    by_key = {}
+    for rec in records:
+        d = rec.to_dict() if hasattr(rec, "to_dict") else rec
+        name = d["scenario"]["name"]
+        if not name.startswith("staggered_spec"):
+            continue
+        prof = d["profile"]
+        cell = d["cells"][0]
+        usd_hr = prof["hourly_cost_usd"]
+        rps = cell["requests_per_s"]
+        lanes = d["engine_window"].get("lanes", {})
+        prop = sum(s.get("spec_proposed", 0) for s in lanes.values())
+        acc = sum(s.get("spec_accepted", 0) for s in lanes.values())
+        by_key.setdefault(f"{prof['provider']}/{prof['machine']}", {})[
+            "sd" if name.endswith("_sd") else "off"] = {
+                "usd_per_1m_requests": usd_hr / 3600.0 / max(rps, 1e-9)
+                                       * 1e6,
+                "requests_per_s": rps,
+                "tokens_per_s": cell["tokens_per_s"],
+                "accept_rate": acc / prop if prop else 0.0}
+    out = []
+    for key, pair in sorted(by_key.items()):
+        if "off" not in pair or "sd" not in pair:
+            continue
+        off, sd = pair["off"], pair["sd"]
+        out.append({
+            "profile": key,
+            "usd_per_1m_requests_off": off["usd_per_1m_requests"],
+            "usd_per_1m_requests_sd": sd["usd_per_1m_requests"],
+            "usd_drop_pct": 100.0 * (1 - sd["usd_per_1m_requests"]
+                                     / max(off["usd_per_1m_requests"],
+                                           1e-12)),
+            "tokens_per_s_off": off["tokens_per_s"],
+            "tokens_per_s_sd": sd["tokens_per_s"],
+            "accept_rate": sd["accept_rate"]})
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -237,6 +309,14 @@ def main(argv=None) -> None:
                     help="add the quantized-serving staggered A/B pair "
                          "(int8 weights + int8 KV vs bf16/f32) and report "
                          "the per-profile footprint + $/1M-requests delta")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="add the speculative-decoding staggered A/B pair "
+                         "(draft-and-verify vs plain decode) and report "
+                         "the per-profile $/1M-requests delta plus the "
+                         "measured accept rate")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify round for the "
+                         "--spec-decode pair")
     ap.add_argument("--arch", default="qwen2-0.5b",
                     choices=ARCHS + ["gector-base"],
                     help="decoder arch for --staggered")
@@ -289,6 +369,8 @@ def main(argv=None) -> None:
         report["prefix_cache"] = prefix_cache_cells(records)
     if args.quant:
         report["quant"] = quant_cells(records)
+    if args.spec_decode:
+        report["spec_decode"] = spec_decode_cells(records)
     write_report(report, drift_path)
     print(f"[out] {grid_path} ({len(records)} records)")
     print(f"[out] {drift_path}")
@@ -308,6 +390,14 @@ def main(argv=None) -> None:
               f"{cell['footprint_bytes_off']} -> "
               f"{cell['footprint_bytes_q8']} bytes "
               f"({cell['footprint_ratio']:.2f}x smaller)")
+    for cell in report.get("spec_decode", []):
+        print(f"spec-decode {cell['profile']}: "
+              f"${cell['usd_per_1m_requests_off']:.2f} -> "
+              f"${cell['usd_per_1m_requests_sd']:.2f} per 1M requests "
+              f"({cell['usd_drop_pct']:+.1f}%), "
+              f"{cell['tokens_per_s_off']:.1f} -> "
+              f"{cell['tokens_per_s_sd']:.1f} tok/s, accept rate "
+              f"{cell['accept_rate']:.2f}")
 
 
 if __name__ == "__main__":

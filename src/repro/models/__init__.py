@@ -3,4 +3,5 @@ from repro.models.config import (AttnConfig, ModelConfig, MoEConfig,  # noqa
 from repro.models.transformer import (decode_loop, decode_segment,  # noqa
                                       decode_step, forward, init_params,
                                       make_caches, prefill, prefill_chunk,
-                                      sample_logits)
+                                      sample_logits, spec_round,
+                                      verify_chunk)

@@ -332,6 +332,44 @@ def attn_prefill_chunk(cfg, p, x, positions, cache, *, window=None):
     return shard_activation(o, "batch", None, None), new_cache
 
 
+def attn_verify_chunk(cfg, p, x, positions, cache, *, window=None):
+    """Speculative-verify chunk: score S candidate tokens in one forward,
+    bitwise-identically to running S ``attn_decode`` steps.
+
+    ``attn_prefill_chunk`` attends the fresh chunk's K/V as raw float and
+    only quantizes at the write, so under an int8 KV cache its logits
+    differ (at the last ulp) from decode's — which dequantizes a token's
+    own KV through its stored scale. Verify therefore mirrors decode's
+    order instead: write the chunk's KV into the ring *first* (quantizing
+    under int8 exactly like ``attn_decode`` does), then attend every query
+    over the cache read-back. The key set each query sees matches the
+    per-step decode ring — future in-chunk positions are causally masked,
+    entries at or past the row's frontier hold the pos = -1 sentinel (the
+    scheduler's rollback invariant), and masked entries contribute exact
+    softmax zeros in the same reduction order — so greedy verify logits
+    equal greedy decode logits bitwise under float *and* int8 caches.
+    Requires S < L (slots are sized with spec headroom; no ring wrap).
+    x: (B, S, d); positions: (B, S) absolute; returns (out, cache).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    L = cache["k"].shape[1]
+    slots = positions % L
+    bidx = jnp.arange(B)[:, None]
+    pay = _kv_payload(cache, k, v)
+    new_cache = dict(
+        {key: cache[key].at[bidx, slots].set(val)
+         for key, val in pay.items()},
+        pos=cache["pos"].at[bidx, slots].set(positions),
+        len=cache["len"] + S)
+    rk, rv = _cache_read_kv(new_cache, q.dtype)
+    out = naive_attention(q, rk, rv, positions, new_cache["pos"],
+                          causal=True, window=window,
+                          softcap=cfg.attn.logit_softcap)
+    o = qeinsum("bshk,hkd->bsd", out, p["wo"])
+    return shard_activation(o, "batch", None, None), new_cache
+
+
 def cross_attn_apply(cfg, p, x, enc_kv):
     """Cross-attention (whisper decoder). enc_kv = (k, v) precomputed from
     encoder output: (B, T, Hkv, D) each."""

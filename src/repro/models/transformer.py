@@ -147,6 +147,10 @@ def _apply_block(cfg, kind, p, x, positions, cache, *, mode, causal,
             a, cache = attn_mod.attn_prefill_chunk(cfg, p["attn"], h,
                                                    positions, cache,
                                                    window=window)
+        elif mode == "verify":
+            a, cache = attn_mod.attn_verify_chunk(cfg, p["attn"], h,
+                                                  positions, cache,
+                                                  window=window)
         else:
             if not causal:
                 q, k, v = attn_mod._project_qkv(cfg, p["attn"], h, positions)
@@ -214,9 +218,11 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
     """Run the model.
 
     mode: 'full' (train/prefill from an empty cache), 'decode' (single step
-    with caches), or 'chunk' (incremental prefill continuation: attend over
+    with caches), 'chunk' (incremental prefill continuation: attend over
     the cached prefix + this chunk, then extend the caches at the chunk's
-    absolute ``positions`` — recurrent states simply carry across chunks).
+    absolute ``positions`` — recurrent states simply carry across chunks),
+    or 'verify' (speculative verify: like 'chunk' but write-first so the
+    logits match per-step decode bitwise — see ``attn_verify_chunk``).
     unroll_periods: None = auto (unroll the period stack for single-token
     decode when ``n_periods`` is large — measured on CPU, the scan's
     per-iteration dynamic-slice of the stacked params is cheap while they
@@ -353,6 +359,74 @@ def prefill_chunk(cfg, params, tokens, positions, caches, *, long_ctx=False):
     """
     return forward(cfg, params, tokens=tokens, positions=positions,
                    caches=caches, mode="chunk", long_ctx=long_ctx)
+
+
+def verify_chunk(cfg, params, tokens, positions, caches, *, long_ctx=False):
+    """Score S candidate tokens in one forward, bitwise-identically to S
+    ``decode_step`` calls (speculative decoding's verify core). Same
+    signature as ``prefill_chunk``; see ``attention.attn_verify_chunk``
+    for why verify writes the chunk's KV before attending while chunked
+    prefill attends first."""
+    return forward(cfg, params, tokens=tokens, positions=positions,
+                   caches=caches, mode="verify", long_ctx=long_ctx)
+
+
+def spec_round(cfg, params, draft_cfg, draft_params, tokens, positions,
+               caches, draft_caches, *, k, temperature=None, top_k=None,
+               seed=None, long_ctx=False):
+    """One draft-and-verify round: propose ``k`` tokens with the draft
+    model, then score all of them with one target ``verify_chunk``.
+
+    tokens (B, 1): the last committed token per row; positions (B, 1): its
+    absolute position (KV not yet written — the ``decode_segment``
+    convention). The draft runs k + 1 sequential decode steps — the last
+    one writes d_k's KV (its sample is discarded) so after a full accept
+    the draft frontier matches the target's. The verify chunk covers
+    [t_0, d_1..d_k] at positions p..p+k; ``verify[:, j]`` is the token the
+    *target* selects at position p+j+1 given that prefix, via the same
+    counter-based ``sample_logits`` as plain decode — so the committed
+    stream (host-side accept: leading agreements + one correction) is
+    token-identical to non-speculative decode, greedy or sampled.
+
+    Returns (drafts (B, k), verify (B, k+1), caches, draft_caches); both
+    caches have KV written through position p+k and must be rolled back to
+    each row's commit boundary (``CachePool.scatter_rollback``) before the
+    next read.
+    """
+    B = tokens.shape[0]
+    tok, pos = tokens, positions
+    drafts = []
+    for _ in range(k):
+        logits, draft_caches, _ = forward(
+            draft_cfg, draft_params, tokens=tok, positions=pos,
+            caches=draft_caches, mode="decode", long_ctx=long_ctx)
+        nxt = sample_logits(logits[:, -1], temperature=temperature,
+                            top_k=top_k, seed=seed,
+                            positions=pos[:, 0] + 1)
+        drafts.append(nxt)
+        tok, pos = nxt[:, None], pos + 1
+    _, draft_caches, _ = forward(
+        draft_cfg, draft_params, tokens=tok, positions=pos,
+        caches=draft_caches, mode="decode", long_ctx=long_ctx)
+    drafts = jnp.stack(drafts, axis=1)                       # (B, k)
+    S = k + 1
+    chunk = jnp.concatenate([tokens, drafts], axis=1)        # (B, S)
+    cpos = positions + jnp.arange(S, dtype=jnp.int32)[None, :]
+    logits, caches, _ = forward(cfg, params, tokens=chunk, positions=cpos,
+                                caches=caches, mode="verify",
+                                long_ctx=long_ctx)
+    flat = logits.reshape(B * S, logits.shape[-1])
+    if temperature is None:
+        verify = sample_logits(flat)
+    else:
+        # row-major repeat keeps (seed, position) pairs identical to the
+        # per-step decode path's, so sampled spec-decode commits the same
+        # tokens plain sampled decode would
+        verify = sample_logits(flat, temperature=jnp.repeat(temperature, S),
+                               top_k=jnp.repeat(top_k, S),
+                               seed=jnp.repeat(seed, S),
+                               positions=(cpos + 1).reshape(-1))
+    return drafts, verify.reshape(B, S), caches, draft_caches
 
 
 def decode_step(cfg, params, tokens, positions, caches, *, long_ctx=False,

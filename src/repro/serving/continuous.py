@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationResult, RequestTiming)
+from repro.serving import kvcache
 from repro.serving.kvcache import CachePool
 from repro.serving.scheduler import LaneQueue, pick_tier
 
@@ -139,9 +140,12 @@ class _Lane:
 
     def get_staging(self, eng) -> CachePool:  # holds: worker
         if self.staging is None:
+            # engine._slot_len keeps staging slots shape-identical to lane
+            # slots (full-slot copies at fill-complete install), including
+            # spec-decode's verify-chunk ring headroom
             self.staging = CachePool(
                 eng.cfg, eng.ec.max_batch,
-                self.bucket + eng.ec.max_new_tokens, dtype=jnp.float32,
+                eng._slot_len(self.bucket), dtype=jnp.float32,
                 kv_quant=eng.ec.kv_quant)
         return self.staging
 
@@ -209,7 +213,10 @@ class ContinuousScheduler:
         if lane.fills:
             self._fill_chunk(lane)
         if lane.rows:
-            self._segment(lane)
+            if self.eng.ec.spec_decode:
+                self._spec_round(lane)
+            else:
+                self._segment(lane)
 
     # --------------------------------------------------------- admission
     def _admit(self) -> None:  # holds: worker
@@ -320,7 +327,17 @@ class ContinuousScheduler:
                  if any_sample else (None, None, None))
         first, caches = eng._prefill_fn()(
             eng.params, jnp.asarray(toks), jnp.asarray(lens), view, *sargs)
-        pool.write_back(slots, caches, lengths=[int(x) + 1 for x in lens])
+        if eng.ec.spec_decode:
+            # spec install: verify chunks attend the whole ring, so the
+            # padded prefill tail (attn_apply stamps valid pos on every
+            # bucket position) must go back to the empty sentinel — the
+            # rollback fuses that truncation into the write-back
+            pool.scatter_rollback(slots, caches, [int(x) for x in lens],
+                                  lengths=[int(x) + 1 for x in lens])
+            self._draft_prefill(lane, claimed, slots)
+        else:
+            pool.write_back(slots, caches,
+                            lengths=[int(x) + 1 for x in lens])
         first = np.asarray(first)
         eng._stats["prefill_batches"] += 1
         t1 = time.perf_counter()
@@ -405,8 +422,16 @@ class ContinuousScheduler:
             eng.params, jnp.asarray(toks), jnp.asarray(start),
             jnp.asarray(nvalid), pool.batch_view(slots, gather=True),
             *sargs)
-        pool.write_back(slots, caches,
-                        lengths=[len(r.tokens) + 1 for r in reqs])
+        if eng.ec.spec_decode:
+            # the suffix chunk's padded tail also stamps valid pos values
+            # past the prompt — truncate at install (see _prefill_inner)
+            pool.scatter_rollback(slots, caches,
+                                  [len(r.tokens) for r in reqs],
+                                  lengths=[len(r.tokens) + 1 for r in reqs])
+            self._draft_prefill(lane, reqs, slots)
+        else:
+            pool.write_back(slots, caches,
+                            lengths=[len(r.tokens) + 1 for r in reqs])
         first = np.asarray(first)
         eng._stats["prefill_batches"] += 1
         t1 = time.perf_counter()
@@ -561,10 +586,18 @@ class ContinuousScheduler:
             return
         t1 = time.perf_counter()
         # one scatter installs every completed prompt into its lane slot
-        lane.pool.write_back(
-            [f.slot for _, f in done],
-            staging.batch_view([f.stg for _, f in done], gather=True),
-            lengths=[f.filled + 1 for _, f in done])
+        done_slots = [f.slot for _, f in done]
+        src = staging.batch_view([f.stg for _, f in done], gather=True)
+        if eng.ec.spec_decode:
+            # the last staged chunk's padded tail carries valid pos values
+            # past the prompt — truncate at install (see _prefill_inner)
+            lane.pool.scatter_rollback(
+                done_slots, src, [f.filled for _, f in done],
+                lengths=[f.filled + 1 for _, f in done])
+            self._draft_prefill(lane, [f.req for _, f in done], done_slots)
+        else:
+            lane.pool.write_back(
+                done_slots, src, lengths=[f.filled + 1 for _, f in done])
         for i, f in done:
             lane.fills.remove(f)
             staging.release(f.stg)
@@ -675,6 +708,109 @@ class ContinuousScheduler:
         lane.budget[slots] = np.asarray(state["budget"])[:occ]
         lane.active[slots] = st_active
         return slots, toks, emits, st_active, st_eos
+
+    # ------------------------------------------------- speculative rounds
+    def _draft_prefill(self, lane: _Lane, reqs, slots) -> None:  # holds: worker
+        """Whole-prompt prefill of the draft model's KV for newly admitted
+        rows, into the draft pool at the rows' lane slot indices. The
+        draft always sees the full prompt in one call — prompts fit the
+        bucket by construction and the draft has no prefix store —
+        whichever path (whole, prefix-hit, chunked fill) admitted the row
+        on the target side; the rollback wipes the padded tail exactly
+        like the target install's. The draft pool bypasses slot
+        bookkeeping (no claim/release): slot liveness is the lane pool's."""
+        eng = self.eng
+        dpool = eng._get_draft_pool(lane.bucket)
+        B, bucket = len(reqs), lane.bucket
+        toks = np.zeros((B, bucket), np.int32)
+        lens = np.zeros(B, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.tokens)] = r.tokens
+            lens[i] = len(r.tokens)
+        sl = jnp.asarray(list(slots), jnp.int32)
+        dpool.caches, dview = kvcache._reset_and_view(
+            dpool.caches, dpool._template, sl)
+        dcaches = eng._draft_prefill_fn()(eng.draft_params,
+                                          jnp.asarray(toks), dview)
+        dpool.caches = kvcache._scatter_rollback(
+            dpool.caches, dcaches, sl, jnp.asarray(lens))
+
+    def _spec_round(self, lane: _Lane) -> None:  # holds: worker
+        """One draft-and-verify round for a lane's live rows — the spec
+        engine's replacement for ``_segment``. Always the compacted gather
+        path (``segment_width='fixed'`` just pins the tier ladder to
+        max_batch), so untouched pool slots stay bitwise identical: the
+        round runs on a tier-width *view* of both pools and only the live
+        prefix is scattered home, each row truncated to its own commit
+        boundary. Per-row committed counts (1..spec_k+1) desynchronize the
+        rows' positions — which plain per-slot segments never do — and the
+        rollback is what re-establishes, for both pools, the invariant
+        that positions at or past a row's frontier hold the empty
+        sentinel before the next round reads them."""
+        eng = self.eng
+        k = eng.ec.spec_k
+        pool, dpool = lane.pool, eng._get_draft_pool(lane.bucket)
+        slots = sorted(lane.rows)         # deterministic gather order
+        occ = len(slots)
+        width = pick_tier(occ, eng._tiers)
+        idx, view = pool.compact_view(slots, width)
+        _, dview = dpool.compact_view(slots, width)
+        any_sample = any(lane.temp[s] > 0 for s in slots)
+        sargs = ((jnp.asarray(lane.temp[idx]), jnp.asarray(lane.topk[idx]),
+                  jnp.asarray(lane.seed[idx])) if any_sample
+                 else (None, None, None))
+        drafts, verify, caches, dcaches = eng._spec_round_fn()(
+            eng.params, eng.draft_params,
+            jnp.asarray(lane.last_tok[idx][:, None]),
+            jnp.asarray(lane.pos[idx][:, None]), view, dview, *sargs)
+        drafts = np.asarray(drafts)[:occ]         # (occ, k) proposals
+        verify = np.asarray(verify)[:occ]         # (occ, k+1) target picks
+        stat = eng._lane_stat(lane.bucket)
+        eng.batch_sizes.append(occ)
+        eng._stats["decode_segments"] += 1
+        stat["decode_segments"] += 1
+        stat["occupancy_sum"] += occ
+        stat["tier_hist"][width] += 1
+        stat["spec_rounds"] += 1
+        stat["spec_proposed"] += occ * k
+        now = time.perf_counter()
+        bounds = np.zeros(occ, np.int32)
+        retire = []
+        for j, s in enumerate(slots):
+            row = lane.rows[s]
+            a = 0                  # leading draft tokens the target agreed on
+            while a < k and drafts[j, a] == verify[j, a]:
+                a += 1
+            stat["spec_accepted"] += a
+            # commit the agreements plus one target-selected token (the
+            # correction at the first disagreement, or the bonus token
+            # after a full accept), clamped to the row's budget
+            c = min(a + 1, int(lane.budget[s]))
+            committed = verify[j, :c].tolist()
+            eos, eos_hit = int(lane.eos[s]), False
+            if eos >= 0 and eos in committed:
+                committed = committed[:committed.index(eos) + 1]
+                eos_hit = True
+            c = len(committed)
+            bounds[j] = int(lane.pos[s]) + c
+            lane.last_tok[s] = committed[-1]
+            lane.pos[s] = bounds[j]
+            lane.budget[s] -= c
+            row.toks.extend(committed)
+            row.req.handle._push(committed)
+            pool.lengths[s] = int(bounds[j]) + 1
+            if eos_hit:
+                retire.append((row, FINISH_EOS))
+            elif lane.budget[s] <= 0:
+                retire.append((row, FINISH_LENGTH))
+            elif row.req.handle.cancel_requested:
+                retire.append((row, FINISH_CANCELLED))
+        # scatter before retiring (like _segment_compact): _finish releases
+        # slots, and a released slot must not be written afterwards
+        pool.scatter_rollback(slots, caches, bounds)
+        dpool.scatter_rollback(slots, dcaches, bounds)
+        for row, reason in retire:
+            self._finish(lane, row, reason, now)
 
     # ------------------------------------------------------------ retire
     def _resolve(self, r, toks, reason: str, now: float) -> None:  # holds: worker

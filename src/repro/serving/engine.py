@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (decode_segment, decode_step, forward, make_caches,
-                          prefill_chunk, sample_logits)
+                          prefill_chunk, sample_logits, spec_round)
 from repro.quant import params_bytes, quantize_params, validate_kv_quant
 from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_LENGTH,
                                GenerationRequest, GenerationResult, HeadFn,
@@ -115,6 +115,18 @@ class EngineConfig:
     # dequantize at gather; lanes, width tiers and the prefix cache carry
     # the scale planes unchanged. Decoder mode only.
     kv_quant: Optional[str] = None
+    # speculative decoding: each scheduler turn a small draft model
+    # proposes spec_k tokens per row and the target verifies all of them
+    # in one fused forward, committing the leading agreements plus one
+    # target-selected token (>= 1 token/round/row). Requires the
+    # continuous path, a pure global-attention pattern on both models,
+    # and a ``draft=(draft_cfg, draft_params)`` pair at engine
+    # construction. Token-identical to plain decode, greedy or sampled.
+    spec_decode: bool = False
+    # draft tokens proposed per round; the verify chunk covers
+    # spec_k + 1 positions, so each slot carries spec_k positions of ring
+    # headroom beyond bucket + max_new_tokens
+    spec_k: int = 4
 
 
 @dataclasses.dataclass
@@ -155,16 +167,19 @@ def _trim_host(gen: np.ndarray, eos: np.ndarray, budget: np.ndarray):
 
 class ServingEngine:
     def __init__(self, cfg, params, engine_cfg: EngineConfig,
-                 head_fn: Optional[HeadFn] = None):
+                 head_fn: Optional[HeadFn] = None, draft=None):
         """``head_fn(params, hidden, mask)`` — see ``serving.api.HeadFn``:
         called inside the jitted encoder function with the full parameter
         tree, final hidden states (B, S, d_model) and the validity mask
         (B, S); returns the per-request payload. Defaults to hidden states
-        (encoder) / generated tokens (decoder)."""
+        (encoder) / generated tokens (decoder). ``draft`` is the
+        ``(draft_cfg, draft_params)`` pair speculative decoding proposes
+        with (required iff ``spec_decode`` is on)."""
         self.cfg = cfg                    # guarded-by: init
         self.params = params              # guarded-by: init
         self.ec = engine_cfg              # guarded-by: init
         self.head_fn = head_fn            # guarded-by: init
+        self.draft_cfg, self.draft_params = draft or (None, None)  # guarded-by: init
         if engine_cfg.weight_quant not in (None, "int8"):
             raise ValueError(f"weight_quant must be None or 'int8', got "
                              f"{engine_cfg.weight_quant!r}")
@@ -247,6 +262,34 @@ class ServingEngine:
                     f"pattern: sliding-window rings and recurrent states "
                     f"cannot be replayed at an absolute KV offset "
                     f"(pattern={cfg.pattern!r})")
+        self._draft_pools = {}            # guarded-by: worker — bucket -> draft CachePool
+        if engine_cfg.spec_decode:
+            if not self.continuous_active:
+                raise ValueError(
+                    "spec_decode requires the continuous decoder path "
+                    "(mode='decoder', continuous/use_scan_decode/"
+                    "use_cache_pool all on)")
+            if engine_cfg.spec_k < 1:
+                raise ValueError(
+                    f"spec_k must be >= 1, got {engine_cfg.spec_k}")
+            if self.draft_cfg is None or self.draft_params is None:
+                raise ValueError(
+                    "spec_decode requires draft=(draft_cfg, draft_params) "
+                    "at engine construction")
+            for role, c in (("target", cfg), ("draft", self.draft_cfg)):
+                bad = [k for k in c.pattern
+                       if k not in ("attn", "attn_global")]
+                if bad or getattr(c, "enc_layers", 0):
+                    raise ValueError(
+                        f"spec_decode requires a pure global-attention "
+                        f"{role} pattern: per-row KV rollback cannot "
+                        f"rewind sliding-window rings or recurrent state "
+                        f"(pattern={c.pattern!r})")
+            if self.draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab_size {self.draft_cfg.vocab_size} != "
+                    f"target {cfg.vocab_size}: proposed ids must be "
+                    f"scoreable by the target")
         if self.continuous_active:
             for b in engine_cfg.pad_buckets:
                 self._lane_stat(b)   # fixed key set: metrics() iterates
@@ -500,6 +543,10 @@ class ServingEngine:
 
         for bucket in buckets:
             pool = self._get_pool(bucket)
+            spec = self.ec.spec_decode
+            dpool = self._get_draft_pool(bucket) if spec else None
+            if spec:       # draft device pool allocs front-loaded too
+                jax.block_until_ready(jax.tree.leaves(dpool.caches)[0])
             chunked = chunk is not None and bucket > chunk
             if chunked:
                 # create the fill path's staging pool now — first-traffic
@@ -515,7 +562,15 @@ class ServingEngine:
                     lens = jnp.full((b,), min(4, bucket), jnp.int32)
                     tok, caches = self._prefill_fn()(
                         self.params, toks, lens, view, *sargs)
-                    pool.write_back(slots, caches)
+                    if spec:
+                        # the live spec install path truncates the padded
+                        # prefill tail in the same fused scatter (verify
+                        # chunks attend the whole ring, so positions past
+                        # a row's frontier must hold the empty sentinel)
+                        pool.scatter_rollback(slots, caches,
+                                              [min(4, bucket)] * b)
+                    else:
+                        pool.write_back(slots, caches)
                     jax.block_until_ready(tok)
                     pool.release_many(slots)
                     if chunked:
@@ -533,8 +588,30 @@ class ServingEngine:
                             jnp.full((b,), chunk, jnp.int32), view,
                             *sargs)
                         pool.write_back(slots, caches)
+                        if spec:
+                            # mid-fill chunks write_back to staging (primed
+                            # above — same leaf shapes); the fill-complete
+                            # install additionally rolls back, so prime
+                            # that variant too
+                            pool.scatter_rollback(
+                                slots, pool.batch_view(slots, gather=True),
+                                [chunk] * b)
                         jax.block_until_ready(ctok)
                         pool.release_many(slots)
+                if spec:
+                    # draft whole-prompt prefill + rollback per join size,
+                    # driven with the module helpers at lane slot indices
+                    # exactly as the scheduler does (no claim/release)
+                    sl = jnp.asarray(list(range(b)), jnp.int32)
+                    dpool.caches, dview = kvcache._reset_and_view(
+                        dpool.caches, dpool._template, sl)
+                    dcaches = self._draft_prefill_fn()(
+                        self.draft_params,
+                        jnp.asarray(np.zeros((b, bucket), np.int32)), dview)
+                    dpool.caches = kvcache._scatter_rollback(
+                        dpool.caches, dcaches, sl,
+                        jnp.full((b,), min(4, bucket), jnp.int32))
+                    jax.block_until_ready(jax.tree.leaves(dpool.caches)[0])
                 if store is not None:
                     # hit path: claimed (unreset) slots + fused store->lane
                     # copy, per hit-batch size; the suffix chunk call and
@@ -554,6 +631,26 @@ class ServingEngine:
                     jnp.asarray(chunk, jnp.int32))
                 jax.block_until_ready(
                     jax.tree.leaves(store.pool.caches)[0])
+            if spec:
+                # spec lanes never run decode segments — every turn is a
+                # compacted draft-and-verify round (even 'fixed' runs the
+                # gather path at width max_batch), so prime the round per
+                # width tier plus the (occupancy, width) rollback variants
+                for occ in sizes:
+                    width = pick_tier(occ, self._tiers)
+                    for sargs_w in svariants(width):
+                        slots = list(range(occ))
+                        _, view = pool.compact_view(slots, width)
+                        _, dview = dpool.compact_view(slots, width)
+                        _, verify, seg, dseg = self._spec_round_fn()(
+                            self.params, self.draft_params,
+                            jnp.zeros((width, 1), jnp.int32),
+                            jnp.zeros((width, 1), jnp.int32),
+                            view, dview, *sargs_w)
+                        pool.scatter_rollback(slots, seg, [1] * occ)
+                        dpool.scatter_rollback(slots, dseg, [1] * occ)
+                        jax.block_until_ready(verify)
+                continue
             for sargs_n in svariants(n):
                 toks, _, _, caches = self._segment_fn()(
                     self.params, jnp.zeros((n, 1), jnp.int32),
@@ -761,17 +858,74 @@ class ServingEngine:
             self._compiled["cont_segment"] = jax.jit(fn, donate_argnums=3)
         return self._compiled["cont_segment"]
 
+    def _draft_prefill_fn(self):  # holds: worker
+        """Whole-prompt prefill into the draft pool's slot caches. No
+        token selection — the round's first draft step samples from the
+        prompt's last position — and ``return_hidden`` keeps the draft
+        lm_head out of the graph. jit specializes per (n_new, bucket)."""
+        if "spec_dprefill" not in self._compiled:
+            def fn(dparams, toks, caches):
+                _, caches, _ = forward(self.draft_cfg, dparams, tokens=toks,
+                                       caches=caches, mode="full",
+                                       return_hidden=True)
+                return caches
+            self._compiled["spec_dprefill"] = jax.jit(fn)
+        return self._compiled["spec_dprefill"]
+
+    def _spec_round_fn(self):  # holds: worker
+        """One fused draft-and-verify round (``models.spec_round``): spec_k
+        draft decode steps + one target verify chunk, one dispatch. Both
+        cache views are donated — the scheduler scatter-rollbacks the
+        returned trees to each row's commit boundary."""
+        if "spec_round" not in self._compiled:
+            k = self.ec.spec_k
+
+            def fn(params, dparams, tok, pos, caches, dcaches,
+                   temp, topk, seed):
+                return spec_round(self.cfg, params, self.draft_cfg, dparams,
+                                  tok, pos, caches, dcaches, k=k,
+                                  temperature=temp, top_k=topk, seed=seed)
+
+            self._compiled["spec_round"] = jax.jit(fn,
+                                                   donate_argnums=(4, 5))
+        return self._compiled["spec_round"]
+
+    def _slot_len(self, bucket: int) -> int:  # holds: worker
+        """KV ring length for the bucket's slots. Spec-decode rounds write
+        a verify chunk of spec_k + 1 positions starting at the row's
+        frontier, so a row one token short of its budget still reaches
+        position bucket + max_new_tokens - 1 + spec_k — without the
+        headroom the chunk would wrap the ring and overwrite the prompt's
+        KV (the over-provisioned tail is rolled back, never committed)."""
+        return (bucket + self.ec.max_new_tokens
+                + (self.ec.spec_k if self.ec.spec_decode else 0))
+
     def _get_pool(self, bucket: int) -> CachePool:  # holds: worker
         pool = self._pools.get(bucket)
         if pool is None:
             pool = CachePool(self.cfg, self.ec.max_batch,
-                             bucket + self.ec.max_new_tokens,
+                             self._slot_len(bucket),
                              dtype=jnp.float32,
                              kv_quant=self.ec.kv_quant)
             self._pools[bucket] = pool
             if self.continuous_active:
                 self._lane_stat(bucket)["kv_bytes"] = int(
                     sum(x.nbytes for x in jax.tree.leaves(pool.caches)))
+        return pool
+
+    def _get_draft_pool(self, bucket: int) -> CachePool:  # holds: worker
+        """The bucket's draft-model KV pool. Slot i mirrors lane slot i
+        (same indices, same ring length), but the pool bypasses slot
+        bookkeeping entirely — the scheduler drives it with the module
+        helpers at the lane's slot indices, so claim/release state lives
+        only on the lane pool. Draft KV stays float even under kv_quant:
+        its logits only gate proposals (never committed tokens), and the
+        small draft's cache is not the residency bottleneck."""
+        pool = self._draft_pools.get(bucket)
+        if pool is None:
+            pool = CachePool(self.draft_cfg, self.ec.max_batch,
+                             self._slot_len(bucket), dtype=jnp.float32)
+            self._draft_pools[bucket] = pool
         return pool
 
     def _prefix_store(self, bucket: int):  # holds: worker
@@ -789,7 +943,7 @@ class ServingEngine:
         if store is None:
             store = kvcache.PrefixStore(
                 self.cfg, self.ec.max_batch,
-                bucket + self.ec.max_new_tokens, C,
+                self._slot_len(bucket), C,
                 capacity_bytes=self.ec.prefix_cache_bytes,
                 dtype=jnp.float32, kv_quant=self.ec.kv_quant)
             self._prefix_stores[bucket] = store
@@ -946,6 +1100,10 @@ class ServingEngine:
                 "prefix_hits": 0, "prefix_misses": 0,
                 "prefix_hit_tokens": 0, "prefix_inserts": 0,
                 "prefix_evictions": 0,
+                "spec_rounds": 0,        # draft-and-verify rounds run
+                "spec_proposed": 0,      # draft tokens offered (occ * k)
+                "spec_accepted": 0,      # draft tokens the target agreed on
+
                 "prefix_bytes": 0,   # gauges (see _LANE_GAUGES), not counters
                 "kv_bytes": 0,       # lane pool KV residency (scales incl.)
                 # segment width -> segments run at it. Every tier is
@@ -970,7 +1128,8 @@ class ServingEngine:
         pool_fns = (kvcache._reset_slots, kvcache._reset_and_view,
                     kvcache._reset_and_view_run, kvcache._take_slots,
                     kvcache._write_slots, kvcache._scatter_prefix,
-                    kvcache._load_slots, kvcache._store_prefix)
+                    kvcache._load_slots, kvcache._store_prefix,
+                    kvcache._scatter_rollback)
         for fn in list(self._compiled.values()) + list(pool_fns):
             fns = fn if isinstance(fn, tuple) else (fn,)
             for f in fns:
@@ -1006,6 +1165,9 @@ class ServingEngine:
             segs = d.get("decode_segments", 0)
             d["occupancy_mean"] = (d.pop("occupancy_sum", 0) / segs
                                    if segs else 0.0)
+            prop = d.get("spec_proposed", 0)
+            d["spec_accept_rate"] = (d.get("spec_accepted", 0) / prop
+                                     if prop else 0.0)
             out[bucket] = d
         return out
 

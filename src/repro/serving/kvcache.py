@@ -234,6 +234,23 @@ class CachePool:
             for s, n in zip(slots, lengths):
                 self.lengths[s] = int(n)
 
+    def scatter_rollback(self, slots: Sequence[int], batch_caches,
+                         boundaries: Sequence[int],
+                         lengths: Optional[Sequence[int]] = None) -> None:
+        """``scatter_back`` with a per-row KV truncate: row k of the view
+        lands in slot ``slots[k]`` with every cached position >=
+        ``boundaries[k]`` reset to the empty sentinel (and ``len``
+        clamped). Speculative decoding's per-row accept/rollback — one
+        fused op replaces write-back-then-truncate — and keeps the same
+        untouched-slots-stay-bitwise contract as ``scatter_back`` (padding
+        view rows beyond ``len(slots)`` are sliced away in-graph)."""
+        self.caches = _scatter_rollback(
+            self.caches, batch_caches, jnp.asarray(list(slots), jnp.int32),
+            jnp.asarray(list(boundaries), jnp.int32))
+        if lengths is not None:
+            for s, n in zip(slots, lengths):
+                self.lengths[s] = int(n)
+
     def write_back(self, slots: Sequence[int], batch_caches,
                    lengths: Optional[Sequence[int]] = None) -> None:
         """Store a batch view's (updated) caches back into the pool slots —
@@ -301,6 +318,37 @@ def _store_prefix(dst, src, dst_idx, src_idx, n_tokens):
             elif key == "len":
                 taken = jnp.minimum(taken, n_tokens)
             out[key] = d[key].at[:, dst_idx].set(taken)
+        return out
+    return {blk: copy(d, src[blk]) for blk, d in dst.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _scatter_rollback(dst, src, idx, boundary):
+    """Scatter the first ``len(idx)`` rows of a (possibly wider) batch view
+    into pool slots ``idx``, truncating each row's attention cache to its
+    own ``boundary`` (int32 (n,)) position count: ``pos`` entries >= the
+    row's boundary become the -1 empty sentinel and ``len`` is clamped —
+    the per-row generalization of ``_store_prefix``'s scalar truncation,
+    fused with ``_scatter_prefix``'s padding-dropping write-back. This is
+    speculative decoding's accept/rollback: a verify chunk writes KV for
+    every proposed position, then each row keeps only its committed
+    prefix, and the rollback re-establishes the invariant that positions
+    at or past a row's frontier hold the empty sentinel (which the
+    write-first verify chunk relies on). Slots outside ``idx`` stay
+    bitwise untouched. Only sound for pure global-attention cache pytrees
+    ({k, v[, scales], pos, len} per block); the engine gates spec-decode
+    to those configs."""
+    n = idx.shape[0]
+
+    def copy(d, s):
+        out = {}
+        for key in d:
+            taken = jax.lax.slice_in_dim(s[key], 0, n, axis=1)
+            if key == "pos":                      # (n_periods, n, L)
+                taken = jnp.where(taken < boundary[None, :, None], taken, -1)
+            elif key == "len":                    # (n_periods, n)
+                taken = jnp.minimum(taken, boundary[None, :])
+            out[key] = d[key].at[:, idx].set(taken)
         return out
     return {blk: copy(d, src[blk]) for blk, d in dst.items()}
 

@@ -1,0 +1,257 @@
+"""Speculative decoding (draft-and-verify) in the continuous engine.
+
+The contract under test: speculation is a latency optimization, never a
+sampler change. A draft model proposes ``spec_k`` tokens per row per
+round, the target verifies them in one chunked forward, and the engine
+commits the agreed prefix plus one target-selected token, rolling both
+KV pools back to each row's commit boundary — and the resulting token
+streams must be identical to plain (non-speculative) decode, whatever
+other serving feature is stacked on top. The matrix here pins that
+identity across prefix cache, int8 weight/KV quant, adaptive and fixed
+segment widths, chunked prefill and concurrent multi-lane traffic, each
+cell with a measured window asserting zero jit compiles after
+``warmup()``. A hypothesis property pins the per-row KV rollback
+bookkeeping (the generalization of ``scatter_back`` that desynchronized
+row positions force), and a meta-test promotes the offline hypothesis
+shim's determinism into a tested contract.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import decode_segment, init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.kvcache import CachePool
+from repro.serving.scheduler import pick_tier, width_tiers
+
+CFG = get_config("qwen2-0.5b", smoke=True)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+DRAFT_CFG = dataclasses.replace(CFG, name="qwen2-0.5b-smoke-draft",
+                                n_layers=1, d_model=112, n_heads=7,
+                                n_kv_heads=1, d_ff=256)
+DRAFT_PARAMS = init_params(DRAFT_CFG, jax.random.PRNGKey(1))
+RNG = np.random.RandomState(23)
+
+
+def _engine(spec=False, **kw):
+    base = dict(mode="decoder", max_batch=2, max_new_tokens=4,
+                pad_buckets=(16, 32), decode_segment=2)
+    if spec:
+        base.update(spec_decode=True, spec_k=2)
+    base.update(kw)                       # kw wins, so cells can override
+    return ServingEngine(CFG, PARAMS, EngineConfig(**base),
+                         draft=(DRAFT_CFG, DRAFT_PARAMS) if spec else None)
+
+
+def _prompt(n):
+    return RNG.randint(0, CFG.vocab_size, (n,))
+
+
+# 4 prompts over both buckets; [1] shares a 10-token prefix with [0] (the
+# prefix-store hit when prefill_chunk=8: suffix fits one chunk), [3] spans
+# multiple chunks; [2] finishes early on a 2-token budget (the mid-round
+# commit clamp)
+P0 = _prompt(14)
+PROMPTS = [P0, np.concatenate([P0[:10], _prompt(4)]), _prompt(9),
+           _prompt(27)]
+SAMPLING = [SamplingParams(), SamplingParams(),
+            SamplingParams(max_new_tokens=2), SamplingParams()]
+
+
+def _run(eng, sequential):
+    """Serve the shared traffic; sequential guarantees prefix-store hits
+    (request 1 only hits after request 0's insert-on-complete)."""
+    if sequential:
+        return [np.asarray(eng.generate(p, s).result(timeout=300).tokens)
+                for p, s in zip(PROMPTS, SAMPLING)]
+    hs = [eng.generate(p, s) for p, s in zip(PROMPTS, SAMPLING)]
+    return [np.asarray(h.result(timeout=300).tokens) for h in hs]
+
+
+# --------------------------------------------------- cross-feature matrix
+MATRIX = [
+    ("plain", {}),
+    ("chunked", dict(prefill_chunk=8)),
+    ("prefix_cache", dict(prefill_chunk=8, prefix_cache=True)),
+    ("quant", dict(kv_quant="int8", weight_quant="int8")),
+    ("segment_fixed", dict(segment_width="fixed")),
+    ("multi_lane", dict(multi_lane=True)),
+]
+
+
+@pytest.mark.parametrize("name,feat", MATRIX, ids=[m[0] for m in MATRIX])
+def test_spec_decode_identity_matrix(name, feat):
+    """Acceptance: greedy spec decode is token-identical to the same
+    engine with speculation off, under every stacked serving feature —
+    and the spec engine's measured window is compile-clean after
+    warmup() (draft prefills, verify chunks and per-row rollbacks are
+    all primed; nothing specializes mid-serve)."""
+    sequential = name == "prefix_cache"
+    base = _engine(**feat)
+    try:
+        want = _run(base, sequential)
+    finally:
+        base.close()
+    eng = _engine(spec=True, **feat)
+    try:
+        eng.warmup()
+        eng.window()                      # measured span starts here
+        got = _run(eng, sequential)
+        w = eng.window()
+        assert w["jit_compiles"] == 0
+        lanes = w["lanes"]
+        assert sum(s["spec_rounds"] for s in lanes.values()) >= 1
+        assert sum(s["spec_proposed"] for s in lanes.values()) > 0
+        if sequential:                    # the store actually got hit
+            assert sum(s["prefix_hits"] for s in lanes.values()) >= 1
+    finally:
+        eng.close()
+    for i, (a, b) in enumerate(zip(want, got)):
+        assert np.array_equal(a, b), (name, i)
+        # budget accounting is exact: positions never regress and every
+        # round's commit is clamped to the row's remaining budget
+        assert len(b) == (SAMPLING[i].max_new_tokens or 4), (name, i)
+
+
+def test_spec_decode_identity_sampled():
+    """Seeded sampling composes too: the per-(seed, position) counter PRNG
+    makes the verify chunk's row j sample exactly what a plain decode
+    step at that position would, so acceptance is well-defined and the
+    streams match bit-for-bit."""
+    s = [SamplingParams(temperature=0.8, top_k=16, seed=9),
+         SamplingParams()]
+    outs = []
+    for spec in (False, True):
+        eng = _engine(spec=spec)
+        try:
+            hs = [eng.generate(p, sp)
+                  for p, sp in zip([PROMPTS[0], PROMPTS[2]], s)]
+            outs.append([np.asarray(h.result(timeout=300).tokens)
+                         for h in hs])
+        finally:
+            eng.close()
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+def test_spec_decode_metrics_and_validation():
+    eng = _engine(spec=True)
+    try:
+        _run(eng, sequential=False)
+        m = eng.metrics()["lanes"]
+        prop = sum(s["spec_proposed"] for s in m.values())
+        acc = sum(s["spec_accepted"] for s in m.values())
+        assert prop > 0 and 0 <= acc <= prop
+        for s in m.values():
+            if s["spec_proposed"]:
+                assert s["spec_accept_rate"] == pytest.approx(
+                    s["spec_accepted"] / s["spec_proposed"])
+    finally:
+        eng.close()
+    with pytest.raises(ValueError, match="draft"):
+        _engine(spec_decode=True)         # spec without a draft model
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(spec=True, spec_k=0)
+    with pytest.raises(ValueError, match="continuous"):
+        _engine(spec=True, continuous=False)
+    with pytest.raises(ValueError, match="vocab"):
+        bad = dataclasses.replace(DRAFT_CFG, vocab_size=77)
+        ServingEngine(CFG, PARAMS, EngineConfig(
+            mode="decoder", max_batch=2, max_new_tokens=4,
+            pad_buckets=(16,), spec_decode=True),
+            draft=(bad, DRAFT_PARAMS))
+
+
+# ------------------------------------------------ rollback bookkeeping
+@settings(deadline=None, max_examples=6)
+@given(mask=st.integers(1, 2 ** 4 - 1), seed=st.integers(0, 50),
+       base_bound=st.integers(0, 5))
+def test_scatter_rollback_per_row_truncation_property(mask, seed,
+                                                      base_bound):
+    """Property: compact-gather -> mutate -> per-row scatter_rollback
+    touches exactly the compacted slots (everything else stays bitwise
+    identical, extending the scatter_back round-trip property), and for
+    each rolled row the cache obeys the spec commit contract: ring
+    positions at or past the row's boundary are re-written to the empty
+    sentinel before any later read (a verify chunk attends the whole
+    ring, so a stale rolled-back position would leak rejected KV), ring
+    positions below it survive verbatim, the length gauge never exceeds
+    the boundary, and payload keys are copied through untouched."""
+    slots = [i for i in range(4) if mask >> i & 1]
+    occ = len(slots)
+    width = pick_tier(occ, width_tiers(4))
+    pool = CachePool(CFG, 4, 24, dtype=jnp.float32)
+    leaves, treedef = jax.tree.flatten(pool.caches)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    pool.caches = jax.tree.unflatten(treedef, [
+        (jax.random.normal(k, l.shape, l.dtype)
+         if jnp.issubdtype(l.dtype, jnp.floating) else l)
+        for k, l in zip(keys, leaves)])
+    before = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    lengths_before = list(pool.lengths)
+    idx, view = pool.compact_view(slots, width)
+    _, _, _, out = decode_segment(
+        CFG, PARAMS, jnp.zeros((width, 1), jnp.int32),
+        jnp.full((width, 1), 3, jnp.int32), view, n_steps=2,
+        active=jnp.arange(width) < occ,
+        budget=jnp.full((width,), 5, jnp.int32))
+    # per-row boundaries (distinct on purpose: the whole point of the
+    # rollback is that each row truncates at its own commit depth)
+    bnds = np.asarray([(base_bound + j) % 6 for j in range(occ)], np.int32)
+    pool.scatter_rollback(slots, out, bnds)
+    after = [np.asarray(x) for x in jax.tree.leaves(pool.caches)]
+    others = [i for i in range(4) if i not in slots]
+    for b, a in zip(before, after):
+        assert (b[:, others] == a[:, others]).all()
+    for blk, d in out.items():
+        for key, leaf in d.items():
+            src = np.asarray(leaf)[:, :occ]       # padding rows dropped
+            got = np.asarray(pool.caches[blk][key])[:, slots]
+            if key == "pos":
+                exp = np.where(src < bnds[None, :, None], src, -1)
+                assert (got[got >= 0] < np.broadcast_to(
+                    bnds[None, :, None], got.shape)[got >= 0]).all()
+            elif key == "len":
+                exp = np.minimum(src, bnds[None, :])
+                assert (got <= bnds[None, :]).all()
+            else:
+                exp = src
+            assert (got == exp).all(), (blk, key)
+    assert pool.lengths == lengths_before     # gauges only move when asked
+    assert pool.request_of == [None] * 4
+
+
+# ------------------------------------------------- shim determinism meta
+def test_hypothesis_shim_generates_identical_sequences():
+    """The offline `_hypothesis_shim` replaces real hypothesis in
+    environments that cannot install it, and the suite's reproducibility
+    rests on its draws being identical across collections. Promote that
+    from an implementation detail to a contract: two fresh decorated
+    probes draw exactly max_examples examples each, and the sequences
+    match element-for-element. Targets the shim module directly so the
+    test also runs (and means the same thing) where real hypothesis is
+    installed and the shim is inert."""
+    import _hypothesis_shim as shim
+
+    def collect():
+        drawn = []
+
+        @shim.settings(max_examples=7)
+        @shim.given(a=shim.integers(0, 1000),
+                    b=shim.floats(0.25, 4.0),
+                    c=shim.sampled_from(["x", "y", "z"]),
+                    d=shim.booleans())
+        def probe(a, b, c, d):
+            drawn.append((a, b, c, d))
+
+        probe()
+        return drawn
+
+    first, second = collect(), collect()
+    assert len(first) == 7
+    assert first == second
